@@ -1,0 +1,40 @@
+"""Paper Fig. 1b: per-core 512x512 matmul latency across SoC core classes.
+
+Rows: modeled per-core-class matmul latency for each device (the SoC model
+that drives all Swan decisions) + one real host-CPU matmul timing as the
+physical anchor.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import energy as E
+
+MATMUL_GFLOPS = 2 * 512 ** 3 / 1e9
+
+
+def run():
+    rows = []
+    t = None
+    # real host anchor
+    x = jnp.ones((512, 512), jnp.float32)
+    f = jax.jit(lambda a: a @ a)
+    f(x).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(20):
+        f(x).block_until_ready()
+    t = (time.perf_counter() - t0) / 20
+    rows.append(("fig1b/host_cpu_matmul512", t * 1e6, f"{MATMUL_GFLOPS / t:.1f}GFLOPs"))
+    for dev, model in E.SOC_MODELS.items():
+        seen = set()
+        for core in model.cores:
+            if core.name in seen:
+                continue
+            seen.add(core.name)
+            lat = MATMUL_GFLOPS / core.gflops
+            rows.append((f"fig1b/{dev}/{core.name}", lat * 1e6,
+                         f"{core.gflops:.1f}GFLOPs"))
+    return rows

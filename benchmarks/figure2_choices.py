@@ -1,0 +1,45 @@
+"""Paper Fig. 2: latency/energy/power per core-combination (Pixel 3).
+
+Reproduces the two headline observations:
+  O1 - lowest power is NOT lowest energy (little cores lose on energy);
+  O2 - ShuffleNet: more cores can be slower (depthwise cache-thrash), so the
+       fastest choice is a single big core and pruning collapses the ladder.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import energy as E
+from repro.core.choices import enumerate_core_choices
+from repro.core.planner import explore_soc
+from repro.core.profiler import profile_soc_choice
+
+
+def run():
+    rows = []
+    t0 = time.perf_counter()
+    model = E.SOC_MODELS["pixel3"]
+    for workload in ("resnet34", "shufflenet-v2"):
+        for choice in enumerate_core_choices(model):
+            p = profile_soc_choice(choice, model, workload)
+            rows.append((f"fig2/pixel3/{workload}/{p.name}", p.latency_s * 1e6,
+                         f"E={p.energy_j:.2f}J;P={p.power_w:.2f}W"))
+        plan = explore_soc("pixel3", workload)
+        rows.append((f"fig2/pixel3/{workload}/pruned_ladder",
+                     (time.perf_counter() - t0) * 1e6,
+                     ">".join(pr.name for pr in plan.ladder)))
+    # assertions of the two observations (fail loudly if the model regresses)
+    from repro.core.choices import CoreChoice
+    little = profile_soc_choice(CoreChoice((0, 1, 2, 3), "pixel3"), model, "resnet34")
+    big1 = profile_soc_choice(CoreChoice((4,), "pixel3"), model, "resnet34")
+    assert little.power_w < big1.power_w and little.energy_j > big1.energy_j, "O1 regressed"
+    all_big = profile_soc_choice(CoreChoice((4, 5, 6, 7), "pixel3"), model, "shufflenet-v2")
+    assert big1_shuffle_faster(model), "O2 regressed"
+    return rows
+
+
+def big1_shuffle_faster(model):
+    from repro.core.choices import CoreChoice
+    one = profile_soc_choice(CoreChoice((4,), "pixel3"), model, "shufflenet-v2")
+    four = profile_soc_choice(CoreChoice((4, 5, 6, 7), "pixel3"), model, "shufflenet-v2")
+    return one.latency_s < four.latency_s

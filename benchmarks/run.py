@@ -1,0 +1,48 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. ``--fast`` (default) uses reduced
+cohort sizes; ``--full`` runs the 2400-client FL simulation.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names (fig1b,fig2,table2,table3,table4)")
+    args = ap.parse_args()
+
+    from benchmarks import (figure1b_matmul, figure2_choices, table2_local,
+                            table3_interference, table4_fl)
+    benches = {
+        "fig1b": figure1b_matmul.run,
+        "fig2": figure2_choices.run,
+        "table2": table2_local.run,
+        "table3": table3_interference.run,
+        "table4": lambda: table4_fl.run(fast=not args.full),
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        benches = {k: v for k, v in benches.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in benches.items():
+        try:
+            for row_name, us, derived in fn():
+                print(f"{row_name},{us:.1f},{derived}")
+        except Exception as e:
+            failed += 1
+            traceback.print_exc()
+            print(f"{name},0,FAILED:{type(e).__name__}:{e}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,37 @@
+"""Paper Table 2: local speedup + energy efficiency of Swan vs the PyTorch-
+greedy baseline, per (device x model). Paper values inlined for comparison."""
+from __future__ import annotations
+
+import time
+
+from repro.core import energy as E
+from repro.core.planner import explore_soc
+from repro.core.profiler import greedy_baseline_profile
+
+PAPER = {  # (speedup, energy_eff) per (workload, device)
+    ("resnet34", "tab_s6"): (1.9, 1.9), ("resnet34", "oneplus8"): (2.1, 2.4),
+    ("resnet34", "pixel3"): (1.0, 1.0), ("resnet34", "s10e"): (1.9, 2.1),
+    ("resnet34", "mi10"): (2.1, 2.2),
+    ("shufflenet-v2", "tab_s6"): (21, 12.2), ("shufflenet-v2", "oneplus8"): (17, 8.5),
+    ("shufflenet-v2", "pixel3"): (1.8, 1.8), ("shufflenet-v2", "s10e"): (39, 39),
+    ("shufflenet-v2", "mi10"): (17.2, 7.8),
+    ("mobilenet-v2", "tab_s6"): (14.5, 9.4), ("mobilenet-v2", "oneplus8"): (13.9, 7.5),
+    ("mobilenet-v2", "pixel3"): (1.6, 2.3), ("mobilenet-v2", "s10e"): (31.8, 17.4),
+    ("mobilenet-v2", "mi10"): (14, 5.8),
+}
+
+
+def run():
+    rows = []
+    for (wl, dev), (psp, pee) in PAPER.items():
+        t0 = time.perf_counter()
+        plan = explore_soc(dev, wl)
+        base = greedy_baseline_profile(E.SOC_MODELS[dev], wl)
+        us = (time.perf_counter() - t0) * 1e6
+        sp = base.latency_s / plan.selected.latency_s
+        ee = base.energy_j / plan.selected.energy_j
+        rows.append((f"table2/{dev}/{wl}/speedup", us,
+                     f"{sp:.1f}x(paper {psp}x);best={plan.selected.name}"))
+        rows.append((f"table2/{dev}/{wl}/energy_eff", us, f"{ee:.1f}x(paper {pee}x)"))
+        assert sp >= 0.99, f"Swan slower than baseline on {dev}/{wl}"
+    return rows

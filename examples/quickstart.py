@@ -1,0 +1,32 @@
+"""Quickstart: Swan's explore -> prune -> select -> migrate loop in 40 lines.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import energy as E
+from repro.core.planner import explore_soc
+from repro.core.profiler import greedy_baseline_profile
+
+# 1. Explore every execution choice for ShuffleNet on a Pixel 3 (paper §4.2).
+plan = explore_soc("pixel3", "shufflenet-v2")
+print("explored choices:", plan.explored_names)
+
+# 2. Pruning (paper §4.3) removes dominated choices — more cores is SLOWER
+#    for depthwise-heavy models (cache thrashing), so the ladder collapses:
+print("pruned ladder  :", [p.name for p in plan.ladder])
+
+# 3. The selected choice beats the PyTorch-greedy baseline:
+base = greedy_baseline_profile(E.SOC_MODELS["pixel3"], "shufflenet-v2")
+print(f"selected {plan.selected.name}: {base.latency_s / plan.selected.latency_s:.1f}x "
+      f"faster, {base.energy_j / plan.selected.energy_j:.1f}x less energy than baseline")
+
+# 4. Dynamic migration (paper Fig. 4b): a foreground app appears; observed
+#    step latency inflates; the controller downgrades, then recovers.
+ctl = plan.controller(upgrade_patience=3)
+lat = ctl.active.latency_s
+for step in range(12):
+    interference = 1.0 if 3 <= step < 7 else 0.0
+    observed = ctl.active.latency_s * (1 + interference)
+    ctl.observe_step(observed)
+for m in ctl.migrations:
+    print(f"  step {m.step}: {ctl.ladder[m.from_idx].name} -> "
+          f"{ctl.ladder[m.to_idx].name} ({m.reason})")

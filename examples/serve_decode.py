@@ -1,0 +1,21 @@
+"""Batched serving demo: prefill + KV-cache decode on a reduced llama config.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py [--arch llama3.2-1b]
+"""
+import argparse
+
+from repro.launch import serve as S
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    S.main(["--arch", args.arch, "--reduced", "--batch", str(args.batch),
+            "--prompt-len", "32", "--gen", str(args.gen)])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Rolling checkpoint manager with elastic restore.
+
+- ``save(step, state)``: atomic write + retention of the last ``keep`` steps.
+- ``restore_latest(mesh=None, specs=None)``: loads numpy trees and, when a
+  mesh is given, device_puts each leaf under the *current* mesh's sharding —
+  the checkpoint is mesh-shape-agnostic, so restoring onto a smaller surviving
+  mesh (node failure) or a grown one (elastic scale-up) is the same code path.
+  This is Swan's execution-choice migration applied to cluster state.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional
+
+import jax
+
+from repro.checkpoint.store import load_pytree, save_pytree
+
+_PAT = re.compile(r"^step_(\d+)\.ckpt$")
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:010d}.ckpt")
+
+    def steps(self):
+        out = []
+        for name in os.listdir(self.directory):
+            m = _PAT.match(name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def save(self, step: int, state: Any) -> str:
+        # pull to host (works for sharded arrays: addressable data gathered)
+        host_state = jax.tree_util.tree_map(
+            lambda a: jax.device_get(a) if hasattr(a, "dtype") else a, state)
+        path = self._path(step)
+        save_pytree({"step": step, "state": host_state}, path)
+        for s in self.steps()[:-self.keep]:
+            os.unlink(self._path(s))
+        return path
+
+    def restore(self, step: int, *, mesh=None, specs: Optional[Any] = None):
+        payload = load_pytree(self._path(step))
+        state = payload["state"]
+        if mesh is not None:
+            state = shard_restore(state, mesh, specs)
+        return payload["step"], state
+
+    def restore_latest(self, *, mesh=None, specs: Optional[Any] = None):
+        steps = self.steps()
+        if not steps:
+            return None
+        return self.restore(steps[-1], mesh=mesh, specs=specs)
+
+
+def shard_restore(state, mesh, specs=None):
+    """device_put a host pytree under ``mesh`` with per-leaf PartitionSpecs.
+
+    specs=None -> infer from parameter names via models.sharding rules,
+    dropping axes that don't divide (elastic-safe).
+    """
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    if specs is None:
+        from repro.models.sharding import mesh_safe_specs
+        specs = mesh_safe_specs(state, mesh)
+
+    def put(a, spec):
+        if not hasattr(a, "dtype"):
+            return a
+        return jax.device_put(a, NamedSharding(mesh, spec if spec is not None else P()))
+
+    return jax.tree_util.tree_map(put, state, specs)

@@ -1,0 +1,81 @@
+"""Pytree (de)serialization: msgpack + zstd, atomic writes.
+
+Arrays are stored as raw little-endian buffers with dtype/shape metadata;
+the tree structure is encoded as nested msgpack maps/lists. Restore is
+mesh-agnostic: ``load_pytree`` returns numpy arrays which the caller
+device_puts under whatever sharding the *current* mesh dictates — this is
+what makes elastic re-meshing (Swan migration at cluster scale) a pure
+restore-time concern.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any
+
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+_ARR = "__arr__"
+_TUPLE = "__tuple__"
+
+
+def _encode(node):
+    if isinstance(node, dict):
+        return {str(k): _encode(v) for k, v in node.items()}
+    if isinstance(node, (list,)):
+        return [_encode(v) for v in node]
+    if isinstance(node, tuple):
+        return {_TUPLE: [_encode(v) for v in node]}
+    if hasattr(node, "dtype"):  # jax or numpy array
+        a = np.asarray(node)
+        if a.dtype == np.dtype("bfloat16") if hasattr(np, "bfloat16") else False:
+            pass
+        dtype = str(a.dtype)
+        if dtype == "bfloat16":
+            a = a.view(np.uint16)
+        return {_ARR: True, "dtype": dtype, "shape": list(a.shape),
+                "data": a.tobytes()}
+    if isinstance(node, (int, float, str, bool)) or node is None:
+        return node
+    raise TypeError(f"cannot serialize {type(node)}")
+
+
+def _decode(node):
+    if isinstance(node, dict):
+        if node.get(_ARR):
+            dtype = node["dtype"]
+            if dtype == "bfloat16":
+                import ml_dtypes  # noqa: F401 (via jax)
+                a = np.frombuffer(node["data"], np.uint16).reshape(node["shape"])
+                return a.view(ml_dtypes.bfloat16)
+            return np.frombuffer(node["data"], np.dtype(dtype)).reshape(node["shape"]).copy()
+        if _TUPLE in node:
+            return tuple(_decode(v) for v in node[_TUPLE])
+        return {k: _decode(v) for k, v in node.items()}
+    if isinstance(node, list):
+        return [_decode(v) for v in node]
+    return node
+
+
+def save_pytree(tree: Any, path: str, *, level: int = 3) -> None:
+    payload = msgpack.packb(_encode(tree), use_bin_type=True)
+    comp = zstd.ZstdCompressor(level=level).compress(payload)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(comp)
+        os.replace(tmp, path)  # atomic
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load_pytree(path: str) -> Any:
+    with open(path, "rb") as f:
+        comp = f.read()
+    payload = zstd.ZstdDecompressor().decompress(comp)
+    return _decode(msgpack.unpackb(payload, raw=False))

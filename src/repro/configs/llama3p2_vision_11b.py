@@ -1,0 +1,24 @@
+"""llama-3.2-vision-11b [vlm] — hf:meta-llama/Llama-3.2-11B-Vision (unverified).
+
+40L text backbone with cross-attn image layers every 5th block. The vision
+frontend is a STUB: input_specs() supplies precomputed patch embeddings
+(B, 1601, d_model) already projected into the text width.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=128256,
+    activation="silu",
+    norm="rmsnorm",
+    rope_theta=500000.0,
+    cross_attn_every=5,
+    n_image_tokens=1601,
+    source="hf:meta-llama/Llama-3.2-11B-Vision; unverified",
+)

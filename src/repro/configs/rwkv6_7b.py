@@ -1,0 +1,22 @@
+"""rwkv6-7b (Finch) [ssm] — arXiv:2404.05892 (hf tier).
+
+32L d_model=4096, attention-free time-mix with data-dependent decay
+(64 heads x 64), channel-mix d_ff=14336.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=64,  # wkv heads (d_model / 64)
+    n_kv_heads=64,
+    head_dim=64,
+    d_ff=14336,
+    vocab_size=65536,
+    activation="relu2",  # rwkv channel-mix uses squared relu
+    norm="layernorm",
+    pos_embedding="none",
+    source="arXiv:2404.05892; hf",
+)

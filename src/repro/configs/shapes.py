@@ -1,0 +1,31 @@
+"""Assigned input shapes. ``decode_*``/``long_*`` lower serve_step, not train_step."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # train | prefill | decode
+
+
+TRAIN_4K = InputShape("train_4k", 4096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def applicable(config, shape: InputShape) -> tuple[bool, str]:
+    """Whether (arch, shape) is a runnable cell; else the documented skip reason."""
+    if config.family == "cnn":
+        if shape.mode != "train":
+            return False, "CNN workloads have no LM decode/prefill step"
+        return True, ""
+    if shape.name == "long_500k" and not config.sub_quadratic:
+        return False, "quadratic attention at 512k context (per-spec skip for full-attention archs)"
+    return True, ""

@@ -1,0 +1,24 @@
+"""whisper-small [audio enc-dec] — arXiv:2212.04356 (unverified tier).
+
+12L (enc+dec) d_model=768 12H (kv=12) d_ff=3072 vocab=51865. Conv frontend is a
+STUB: input_specs() supplies precomputed audio-frame embeddings (B, 1500, 768).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="encdec",
+    n_layers=12,
+    n_encoder_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab_size=51865,
+    activation="gelu",
+    norm="layernorm",
+    use_bias=True,
+    pos_embedding="sinusoidal",
+    n_audio_frames=1500,
+    source="arXiv:2212.04356; unverified",
+)

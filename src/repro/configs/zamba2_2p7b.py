@@ -1,0 +1,26 @@
+"""zamba2-2.7b [hybrid] — arXiv:2411.15242 (hf tier).
+
+54 Mamba2 layers d_model=2560, ssm_state=64, plus a SHARED attention+MLP block
+(32H, kv=32, d_ff=10240) applied every 6 layers with params reused across
+applications (concat[hidden, embed] -> 2d -> d input projection, per Zamba2).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=10240,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_conv_width=4,
+    ssm_n_groups=1,
+    shared_attn_every=6,
+    activation="gelu",
+    norm="rmsnorm",
+    source="arXiv:2411.15242; hf",
+)

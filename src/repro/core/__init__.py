@@ -1,0 +1,4 @@
+from repro.core.choices import CoreChoice, MeshChoice, enumerate_core_choices, enumerate_mesh_choices  # noqa: F401
+from repro.core.cost import ChoiceProfile, ladder, pareto_prune, pick_fastest  # noqa: F401
+from repro.core.controller import SwanController  # noqa: F401
+from repro.core.planner import SwanPlan, explore_soc, plan_from_profiles  # noqa: F401

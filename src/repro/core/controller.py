@@ -1,0 +1,72 @@
+"""Swan's control loop (paper Fig. 4b): migrate between pruned choices.
+
+Downgrade on inferred interference (relinquish compute to the interferer),
+upgrade after a sustained clear window (hysteresis avoids flapping). The
+ladder comes from core/cost.pareto_prune, so each downgrade step is guaranteed
+to free resources the interferer wants — that is the invariant pruning buys.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+from repro.core.cost import ChoiceProfile
+from repro.core.interference import InterferenceMonitor
+
+
+@dataclasses.dataclass
+class Migration:
+    step: int
+    from_idx: int
+    to_idx: int
+    reason: str
+
+
+class SwanController:
+    def __init__(self, ladder: List[ChoiceProfile], *, upgrade_patience: int = 5,
+                 on_migrate: Optional[Callable] = None):
+        if not ladder:
+            raise ValueError("empty choice ladder")
+        self.ladder = ladder  # index 0 = fastest/costliest
+        self.idx = 0
+        self.upgrade_patience = upgrade_patience
+        self.on_migrate = on_migrate
+        self.monitor = InterferenceMonitor(ladder[0].latency_s)
+        self.migrations: List[Migration] = []
+        self._clear_streak = 0
+        self._step = 0
+
+    @property
+    def active(self) -> ChoiceProfile:
+        return self.ladder[self.idx]
+
+    def _migrate(self, new_idx: int, reason: str):
+        if new_idx == self.idx:
+            return
+        self.migrations.append(Migration(self._step, self.idx, new_idx, reason))
+        self.idx = new_idx
+        self.monitor.rebase(self.active.latency_s)
+        self._clear_streak = 0
+        if self.on_migrate:
+            self.on_migrate(self.active, reason)
+
+    def observe_step(self, observed_latency_s: float) -> ChoiceProfile:
+        """Feed one observed local-step latency; returns the (possibly new)
+        active choice for the next step."""
+        self._step += 1
+        self.monitor.observe(observed_latency_s)
+        if self.monitor.interfering and self.idx + 1 < len(self.ladder):
+            self._migrate(self.idx + 1, "interference")
+        elif self.monitor.clear:
+            self._clear_streak += 1
+            if self._clear_streak >= self.upgrade_patience and self.idx > 0:
+                self._migrate(self.idx - 1, "clear")
+        else:
+            self._clear_streak = 0
+        return self.active
+
+    def force_downgrade(self, reason: str = "external") -> ChoiceProfile:
+        """Hard interference (device loss / preemption notice)."""
+        if self.idx + 1 < len(self.ladder):
+            self._migrate(self.idx + 1, reason)
+        return self.active

@@ -1,0 +1,188 @@
+"""Profiling execution choices (paper §4.2).
+
+SoC choices are profiled with the analytic device model (stands in for the
+paper's few-batch on-device benchmarking; see core/energy.py). TPU mesh
+choices are profiled via AOT compilation: ``jit(...).lower().compile()`` gives
+FLOPs/bytes (cost_analysis) and the collective schedule (HLO text), from which
+the three roofline terms and a latency/energy estimate are derived — the
+work-conserving analogue of benchmarking a few batches, except no device time
+is spent at all.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core import energy as E
+from repro.core.choices import CoreChoice, MeshChoice
+from repro.core.cost import ChoiceProfile
+
+# ---------------------------------------------------------------------------
+# SoC analytic profiler (paper's local benchmarking)
+# ---------------------------------------------------------------------------
+
+
+def soc_throughput(choice: CoreChoice, model: E.SocModel, mem_intensity: float) -> float:
+    """Effective GFLOP/s of a core combination for a given workload.
+
+    - heterogenous combinations pace OMP barriers to the slowest core;
+    - parallel overhead grows with thread count;
+    - memory-bound fraction suffers the cache-thrash penalty (O2) that grows
+      with the number of *threads sharing the cache*.
+    """
+    cores = [model.cores[c] for c in choice.cores]
+    n = len(cores)
+    slowest = min(c.gflops for c in cores)
+    raw = slowest * n  # barrier-paced data parallelism
+    raw /= 1.0 + model.parallel_overhead * (n - 1)
+    thrash = 1.0 + model.thrash_coef * mem_intensity * (n - 1)
+    return raw / thrash
+
+
+def profile_soc_choice(choice: CoreChoice, model: E.SocModel, workload: str,
+                       *, batches: int = 1) -> ChoiceProfile:
+    gflops = E.WORKLOAD_GFLOPS_PER_STEP[workload]
+    mem = E.WORKLOAD_MEM_INTENSITY[workload]
+    thr = soc_throughput(choice, model, mem)
+    latency = gflops / thr  # seconds per local step (batch 16)
+    power = model.base_power_w + sum(model.cores[c].power_w for c in choice.cores)
+    return ChoiceProfile(
+        choice=choice, latency_s=latency * batches, energy_j=power * latency * batches,
+        power_w=power, cost_key=choice.cost_key(model),
+        meta={"workload": workload, "throughput_gflops": thr})
+
+
+def greedy_baseline_profile(model: E.SocModel, workload: str) -> ChoiceProfile:
+    """PyTorch default: one thread per low-latency core, no affinity pinning
+    (paper §5.1 baseline). Unpinned threads migrate => migration_penalty."""
+    classes = model.classes()
+    fast = classes.get("big", ()) + classes.get("prime", ())
+    choice = CoreChoice(fast, model.name)
+    prof = profile_soc_choice(choice, model, workload)
+    lat = prof.latency_s * model.migration_penalty
+    # during migration stalls the cores idle, so average power drops
+    core_w = sum(model.cores[c].power_w for c in choice.cores)
+    power = model.base_power_w + core_w / model.migration_penalty
+    return ChoiceProfile(choice=choice, latency_s=lat, energy_j=power * lat,
+                         power_w=power, cost_key=choice.cost_key(model),
+                         meta={"workload": workload, "baseline": True})
+
+
+# ---------------------------------------------------------------------------
+# TPU AOT profiler
+# ---------------------------------------------------------------------------
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*=\s*(\([^)]*\)|[a-z0-9_\[\],{}/ ]+?)\s", re.I)
+
+_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|pred|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s8": 1, "u8": 1,
+                "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes of every collective op in an HLO dump.
+
+    Works on post-SPMD-partitioning HLO (per-device shapes), so the totals are
+    per-device collective payload — the right operand for the collective
+    roofline term.
+    """
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?[%\w.\-]*\s*=\s*(\([^)]*\)|\S+)\s+(all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)", line)
+        if not m:
+            continue
+        kind = m.group(2).lower()
+        if line.split("=")[0].strip().endswith("-done"):
+            continue
+        shape_txt = m.group(1)
+        b = _shape_bytes(shape_txt)
+        if b:
+            out[kind] = out.get(kind, 0) + b
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    per_device_memory: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def latency_s(self) -> float:
+        # overlap model: compute overlaps memory (roofline max);
+        # collectives partially overlap (conservative: max with sum/2)
+        base = max(self.compute_s, self.memory_s)
+        return max(base, self.collective_s) + 0.5 * min(base, self.collective_s)
+
+
+def roofline_from_compiled(compiled, lowered_text: Optional[str], n_chips: int,
+                           compression_ratio: float = 1.0) -> RooflineTerms:
+    """cost_analysis() on a compiled SPMD executable reports PER-DEVICE
+    flops/bytes (verified empirically: an 8-way batch-sharded matmul reports
+    total/8). The per-device HLO's collective shapes are likewise per-device.
+    So each roofline term is per_device_quantity / per_chip_rate — numerically
+    identical to the assignment's global/(chips*rate) formulas. ``flops`` and
+    ``bytes_accessed`` in the result are GLOBAL (= per-device * n_chips) for
+    reporting."""
+    from repro.core.hlo_cost import analyze
+    if lowered_text is None:
+        lowered_text = compiled.as_text()
+    cost = analyze(lowered_text)  # trip-count-weighted (XLA's counts scans once)
+    flops_dev = cost.flops
+    bytes_dev = cost.bytes
+    coll_dev = int(cost.collective_bytes * compression_ratio)
+    mem_stats = compiled.memory_analysis()
+    per_dev = int(getattr(mem_stats, "temp_size_in_bytes", 0)
+                  + getattr(mem_stats, "argument_size_in_bytes", 0)
+                  + getattr(mem_stats, "output_size_in_bytes", 0)
+                  - getattr(mem_stats, "alias_size_in_bytes", 0))
+    return RooflineTerms(
+        compute_s=flops_dev / E.TPU_PEAK_FLOPS,
+        memory_s=bytes_dev / E.TPU_HBM_BW,
+        collective_s=coll_dev / E.TPU_ICI_BW,
+        flops=flops_dev * n_chips, bytes_accessed=bytes_dev * n_chips,
+        collective_bytes=coll_dev * n_chips,
+        per_device_memory=per_dev)
+
+
+def profile_mesh_choice(choice: MeshChoice, compiled, lowered_text: str,
+                        compression_ratio: float = 1.0) -> ChoiceProfile:
+    terms = roofline_from_compiled(compiled, lowered_text, choice.n_chips,
+                                   compression_ratio)
+    lat = terms.latency_s
+    util = terms.compute_s / max(lat, 1e-12)
+    power = E.tpu_power(util) * choice.n_chips
+    return ChoiceProfile(
+        choice=choice, latency_s=lat, energy_j=power * lat, power_w=power,
+        cost_key=choice.cost_key(), memory_bytes=terms.per_device_memory,
+        meta={"terms": terms, "utilization": util})

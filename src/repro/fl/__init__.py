@@ -1,0 +1,4 @@
+from repro.fl.aggregation import FedYogi, fedavg, fedprox_grad  # noqa: F401
+from repro.fl.client import SwanClient  # noqa: F401
+from repro.fl.simulator import FLConfig, FLResult, compare_policies, run_fl  # noqa: F401
+from repro.fl.traces import make_client_traces, pchip_interpolate  # noqa: F401

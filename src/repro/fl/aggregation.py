@@ -1,0 +1,69 @@
+"""Server aggregation rules: FedAvg, FedProx (client proximal), FedYogi."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def fedavg(global_params, client_deltas: Sequence[Any],
+           weights: Optional[Sequence[float]] = None):
+    """global += weighted mean of client deltas (McMahan et al.)."""
+    n = len(client_deltas)
+    if weights is None:
+        weights = [1.0 / n] * n
+    total = sum(weights)
+    ws = [w / total for w in weights]
+
+    def combine(*leaves):
+        g = leaves[0]
+        acc = jnp.zeros_like(g, dtype=jnp.float32)
+        for w, leaf in zip(ws, leaves[1:]):
+            acc = acc + w * leaf.astype(jnp.float32)
+        return (g.astype(jnp.float32) + acc).astype(g.dtype)
+
+    return jax.tree_util.tree_map(combine, global_params, *client_deltas)
+
+
+def fedprox_grad(local_params, global_params, mu: float):
+    """Proximal-term gradient mu*(w - w_global) added to client grads."""
+    return jax.tree_util.tree_map(
+        lambda w, g: mu * (w.astype(jnp.float32) - g.astype(jnp.float32)),
+        local_params, global_params)
+
+
+@dataclasses.dataclass
+class FedYogi:
+    """Adaptive server optimizer (Reddi et al., cited by the paper)."""
+    lr: float = 0.01
+    b1: float = 0.9
+    b2: float = 0.99
+    eps: float = 1e-3
+    state: Any = None
+
+    def init(self, params):
+        z = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        self.state = {"m": z, "v": jax.tree_util.tree_map(
+            lambda p: jnp.full(p.shape, self.eps ** 2, jnp.float32), params)}
+
+    def step(self, global_params, client_deltas, weights=None):
+        if self.state is None:
+            self.init(global_params)
+        n = len(client_deltas)
+        weights = weights or [1.0 / n] * n
+        total = sum(weights)
+        delta = jax.tree_util.tree_map(
+            lambda *ls: sum(w / total * l.astype(jnp.float32)
+                            for w, l in zip(weights, ls)), *client_deltas)
+        m = jax.tree_util.tree_map(
+            lambda m_, d: self.b1 * m_ + (1 - self.b1) * d, self.state["m"], delta)
+        v = jax.tree_util.tree_map(
+            lambda v_, d: v_ - (1 - self.b2) * jnp.square(d) * jnp.sign(v_ - jnp.square(d)),
+            self.state["v"], delta)
+        self.state = {"m": m, "v": v}
+        return jax.tree_util.tree_map(
+            lambda p, m_, v_: (p.astype(jnp.float32)
+                               + self.lr * m_ / (jnp.sqrt(v_) + self.eps)).astype(p.dtype),
+            global_params, m, v)

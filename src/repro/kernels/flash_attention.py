@@ -1,0 +1,84 @@
+"""Flash-attention forward Pallas kernel (prefill/train hot-spot).
+
+Grid: (batch, heads, q-blocks). Each invocation owns one (block_q, hd) query
+tile in VMEM and streams KV in (block_k, hd) tiles with the online-softmax
+recurrence entirely in registers/VMEM — the (Sq, Sk) score matrix never
+touches HBM. block_q/block_k default to 128 to match the MXU tile; hd rides
+the lane dim.
+
+Heads are pre-broadcast by the wrapper (GQA handled in ops.py), keeping the
+kernel a pure MHA primitive.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, sk: int,
+                  causal: bool, q_offset: int, scale: float):
+    """q: (1,1,block_q,hd); k,v: (1,1,Sk,hd); o: (1,1,block_q,hd)."""
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (bq, hd)
+    bq = q.shape[0]
+    hd = q.shape[1]
+    n_kv = sk // block_k
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0, 0], j * block_k, block_k, 0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0, 0], j * block_k, block_k, 0)
+        s = q @ k.astype(jnp.float32).T  # (bq, bk)
+        if causal:
+            q_idx = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0) + q_offset
+            k_idx = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 1)
+            s = jnp.where(k_idx <= q_idx, s, NEG_INF)
+        m_blk = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_blk)
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[:, None] + p @ v.astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_kv, body, (m0, l0, acc0))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_offset", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention_mha(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                        block_q: int = 128, block_k: int = 128, interpret: bool = True):
+    """q,k,v: (B,H,S,hd) same head count. Returns (B,H,Sq,hd)."""
+    B, H, Sq, hd = q.shape
+    Sk = k.shape[2]
+    bq = min(block_q, Sq)
+    while Sq % bq:
+        bq -= 1
+    bk = min(block_k, Sk)
+    while Sk % bk:
+        bk -= 1
+    scale = 1.0 / math.sqrt(hd)
+    grid = (B, H, Sq // bq)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, block_k=bk, sk=Sk, causal=causal,
+                          q_offset=q_offset, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, Sk, hd), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, Sk, hd), lambda b, h, i: (b, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,44 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in interpret mode; on a real TPU backend
+they lower via Mosaic (interpret=False). The model code calls these through
+``impl="pallas"`` switches; the default dry-run path uses the pure-jnp
+implementations so the 512-host-device AOT compile never lowers Mosaic ops.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.depthwise_conv import depthwise_conv as _dw
+from repro.kernels.flash_attention import flash_attention_mha
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def rmsnorm(x, scale, eps: float = 1e-5):
+    return _rmsnorm(x, scale, eps=eps, interpret=_interpret())
+
+
+def depthwise_conv(x, w):
+    return _dw(x, w, interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0):
+    """q: (B,Sq,H,hd); k,v: (B,Sk,K,hd) with K dividing H (GQA broadcast)."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    if K != H:
+        rep = H // K
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_mha(qt, kt, vt, causal=causal, q_offset=q_offset,
+                              interpret=_interpret())
+    return out.transpose(0, 2, 1, 3)

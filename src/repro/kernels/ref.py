@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_rmsnorm(x, scale, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (xf * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def ref_depthwise_conv(x, w):
+    """x: (B,H,W,C); w: (kh,kw,C); stride 1, SAME padding."""
+    return jax.lax.conv_general_dilated(
+        x, w[:, :, None, :], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"), feature_group_count=x.shape[-1])
+
+
+def ref_flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0):
+    """q: (B,S,H,hd); k,v: (B,S,H,hd) (heads pre-broadcast); fp32 softmax."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        qi = jnp.arange(Sq) + q_offset
+        mask = jnp.arange(Sk)[None, :] <= qi[:, None]
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,102 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Swan-planner perf search over TPU execution choices (EXPERIMENTS.md §Perf).
+
+This IS the paper's technique applied to the pod: each candidate MeshChoice
+(microbatch x remat x chunk x compression) is *explored* via an AOT profile
+(lower+compile -> roofline terms), choices are *pruned* under the Swan cost
+order, and the fastest feasible survivor is *selected*. The log records every
+hypothesis -> measurement pair.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.hillclimb --arch llama3.2-1b \
+      --shape train_4k --out reports/hillclimb_llama.json
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+from repro.configs import SHAPES
+from repro.core.choices import MeshChoice
+from repro.core.cost import ChoiceProfile, ladder, pick_fastest
+from repro.launch.dryrun import default_choice, lower_cell
+
+HBM = 16 * 2 ** 30
+
+
+def profile_choice(arch, shape, choice):
+    rec = lower_cell(arch, shape, choice=choice, verbose=False)
+    if rec["status"] != "ok":
+        return None, rec
+    prof = ChoiceProfile(
+        choice=choice, latency_s=rec["latency_s"],
+        energy_j=rec["latency_s"] * 220 * choice.n_chips,
+        power_w=220 * choice.n_chips, cost_key=choice.cost_key(),
+        memory_bytes=rec["per_device_bytes"], meta=rec)
+    return prof, rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--grid", default=None,
+                    help="semicolon-separated overrides, e.g. 'mb=4,remat=dots;mb=8'")
+    args = ap.parse_args()
+
+    base = default_choice(args.arch, args.shape, False)
+    candidates = [("baseline", base)]
+    if args.grid:
+        for spec in args.grid.split(";"):
+            over = {}
+            for kv in spec.split(","):
+                k, v = kv.split("=")
+                k = {"mb": "microbatch"}.get(k, k)
+                over[k] = int(v) if v.isdigit() else v
+            candidates.append((spec, dataclasses.replace(base, **over)))
+    else:
+        for mb in {1, max(1, base.microbatch // 2), base.microbatch,
+                   base.microbatch * 2}:
+            for remat in ("full", "dots"):
+                if (mb, remat) != (base.microbatch, base.remat):
+                    candidates.append(
+                        (f"mb{mb},{remat}",
+                         dataclasses.replace(base, microbatch=mb, remat=remat)))
+
+    log = []
+    profiles = []
+    for name, choice in candidates:
+        t0 = time.time()
+        prof, rec = profile_choice(args.arch, args.shape, choice)
+        entry = {"candidate": name, "choice": choice.name, "wall_s": round(time.time() - t0, 1)}
+        if prof is None:
+            entry["status"] = rec.get("status")
+        else:
+            entry.update(status="ok", latency_s=rec["latency_s"],
+                         compute_s=rec["compute_s"], memory_s=rec["memory_s"],
+                         collective_s=rec["collective_s"], dominant=rec["dominant"],
+                         gb=rec["per_device_gb"], fits=rec["fits_hbm"],
+                         roofline_fraction=rec["roofline_fraction"])
+            profiles.append(prof)
+        log.append(entry)
+        print(json.dumps(entry))
+
+    lad = ladder(profiles)
+    best = pick_fastest(profiles, memory_limit=HBM)
+    summary = {"arch": args.arch, "shape": args.shape,
+               "ladder": [p.name for p in lad],
+               "selected": best.name,
+               "selected_latency_s": best.latency_s,
+               "selected_roofline": best.meta["roofline_fraction"]}
+    print(json.dumps(summary))
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump({"log": log, "summary": summary}, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

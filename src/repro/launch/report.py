@@ -1,0 +1,37 @@
+"""Inject the roofline table + bottleneck advice into EXPERIMENTS.md.
+
+Usage: PYTHONPATH=src python -m repro.launch.report reports/dryrun.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.launch.roofline import one_liners, render
+
+MARK = "<!-- ROOFLINE_TABLE -->"
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "reports/dryrun.json"
+    with open(path) as f:
+        reports = json.load(f)
+    table = render(reports, None)
+    advice = one_liners([r for r in reports if r["mesh"] == "16x16"])
+    ok = sum(1 for r in reports if r["status"] == "ok")
+    skipped = sum(1 for r in reports if r["status"] == "skipped")
+    failed = sum(1 for r in reports if r["status"] == "FAILED")
+    block = (f"{MARK}\n\n{ok} cells compiled, {skipped} skipped per spec, "
+             f"{failed} failed.\n\n{table}\n\n### Dominant-term advice "
+             f"(single-pod)\n\n{advice}\n")
+    with open("EXPERIMENTS.md") as f:
+        doc = f.read()
+    pre = doc.split(MARK)[0]
+    post = doc.split("## §Perf")[1] if "## §Perf" in doc else ""
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(pre + block + "\n## §Perf" + post)
+    print(f"injected table: {ok} ok / {skipped} skipped / {failed} failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Roofline report: reads the dry-run JSON and renders EXPERIMENTS.md tables.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline reports/dryrun.json [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+BOTTLENECK_FIX = {
+    "compute": "reduce recompute (remat policy) / increase MXU utilization via larger per-chip tiles",
+    "memory": "fuse elementwise chains, cut activation round-trips (bigger microbatch, kernel fusion)",
+    "collective": "shrink payloads (grad compression, bf16 collectives) or trade TP for DP",
+}
+
+
+def render(reports, mesh_filter=None):
+    rows = [r for r in reports if mesh_filter is None or r["mesh"] == mesh_filter]
+    rows.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+    out = []
+    hdr = ("| arch | shape | mesh | status | compute | memory | collective | dominant "
+           "| est step | MODEL_FLOPS/HLO | roofline frac | GB/dev | fits |")
+    out.append(hdr)
+    out.append("|" + "---|" * 13)
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']}: "
+                       f"{r.get('reason', r.get('error', ''))[:60]} |" + " - |" * 9)
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+            f"| {fmt_s(r['collective_s'])} | {r['dominant']} "
+            f"| {fmt_s(r['latency_s'])} | {r['useful_flops_ratio']:.3f} "
+            f"| {r['roofline_fraction']:.3f} | {r['per_device_gb']:.2f} "
+            f"| {'yes' if r['fits_hbm'] else 'NO'} |")
+    return "\n".join(out)
+
+
+def one_liners(reports):
+    out = []
+    for r in sorted(reports, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] != "ok":
+            continue
+        out.append(f"- **{r['arch']} x {r['shape']} ({r['mesh']})**: dominant = "
+                   f"{r['dominant']}; to move it down: {BOTTLENECK_FIX[r['dominant']]}.")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("report")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--advice", action="store_true")
+    args = ap.parse_args()
+    with open(args.report) as f:
+        reports = json.load(f)
+    print(render(reports, args.mesh))
+    if args.advice:
+        print()
+        print(one_liners(reports))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+``input_specs`` returns weak-type-correct, shardable SDS trees with NO device
+allocation — the dry-run lowers against these. Modality frontends are stubs
+per the assignment: audio/image embeddings appear as precomputed inputs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models.sharding import axis_rules, mesh_safe_specs, resolve
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, *, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """SDS tree for the data batch of a cell (train/prefill modes)."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "cnn":
+        return {"images": _sds((B, cfg.image_size, cfg.image_size, cfg.in_channels), dtype),
+                "labels": _sds((B,), jnp.int32)}
+    batch = {"tokens": _sds((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["image_embed"] = _sds((B, cfg.n_image_tokens, cfg.d_model), dtype)
+    if cfg.family == "encdec":
+        batch["audio_embed"] = _sds((B, cfg.n_audio_frames, cfg.d_model), dtype)
+    return batch
+
+
+def decode_specs(model, cfg: ModelConfig, shape: InputShape,
+                 *, cache_dtype=jnp.bfloat16) -> Tuple[Dict[str, Any], Any]:
+    """(inputs, cache) SDS for a decode cell: one new token against a
+    seq_len-deep cache."""
+    B, S = shape.global_batch, shape.seq_len
+    tokens = _sds((B, 1), jnp.int32)
+    cache = jax.eval_shape(lambda: model.init_cache(B, S, cache_dtype))
+    inputs = {"tokens": tokens, "cache_len": _sds((), jnp.int32)}
+    return inputs, cache
+
+
+# ---------------------------------------------------------------------------
+# sharding assignment
+# ---------------------------------------------------------------------------
+
+
+def _shardable(spec: P, shape, mesh) -> P:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    names = set(mesh.axis_names)
+    entries = tuple(spec) + (None,) * (len(shape) - len(spec))
+    fixed = []
+    for dim, e in zip(shape, entries):
+        if e is None:
+            fixed.append(None)
+            continue
+        axes = (e,) if isinstance(e, str) else tuple(a for a in e)
+        axes = tuple(a for a in axes if a in names)
+        ext = 1
+        for a in axes:
+            ext *= sizes[a]
+        if not axes or ext == 1 or dim % ext != 0:
+            fixed.append(None)
+        else:
+            fixed.append(axes[0] if len(axes) == 1 else axes)
+    return P(*fixed)
+
+
+def batch_shardings(batch_sds, mesh, rules: dict):
+    """NamedShardings for a data batch: leading dim over the batch axes."""
+    with axis_rules(rules):
+        def one(sds):
+            spec = resolve("batch", *([None] * (len(sds.shape) - 1)))
+            return NamedSharding(mesh, _shardable(spec, sds.shape, mesh))
+
+        return jax.tree_util.tree_map(one, batch_sds)
+
+
+_CACHE_AXES = {
+    "k": ("layer", "batch", "kvseq", None, None),
+    "v": ("layer", "batch", "kvseq", None, None),
+    "latent": ("layer", "batch", "kvseq", None),
+    "k_rope": ("layer", "batch", "kvseq", None),
+    "h": ("layer", "batch", "tp", None, None),      # mamba ssm state (heads)
+    "conv": ("layer", "batch", None, None),
+    "S": ("layer", "batch", "tp", None, None),      # rwkv wkv state (heads)
+    "prev_t": ("layer", "batch", None),
+    "prev_c": ("layer", "batch", None),
+}
+
+
+def cache_shardings(cache_sds, mesh, rules: dict):
+    with axis_rules(rules):
+        flat = jax.tree_util.tree_flatten_with_path(cache_sds)[0]
+        leaves = []
+        for kp, sds in flat:
+            key = str(getattr(kp[-1], "key", kp[-1]))
+            logical = _CACHE_AXES.get(key, ("layer", "batch"))
+            logical = tuple(None if a == "layer" else a for a in logical)
+            spec = resolve(*logical[:len(sds.shape)])
+            leaves.append(NamedSharding(mesh, _shardable(spec, sds.shape, mesh)))
+        treedef = jax.tree_util.tree_structure(cache_sds)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def param_shardings(params_sds, mesh, rules: dict):
+    with axis_rules(rules):
+        specs = mesh_safe_specs(params_sds, mesh)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

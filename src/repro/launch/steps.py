@@ -1,0 +1,100 @@
+"""Train/serve step builders — the functions the dry-run lowers and the
+examples execute.
+
+``build_train_step`` composes: microbatched gradient accumulation (lax.scan),
+the model's remat policy (inside build_model), optional gradient compression
+with error feedback (cross-pod reduce), and the optimizer. All sharding comes
+from the logical-axis rules installed by the active MeshChoice.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.choices import MeshChoice
+from repro.models.registry import Model
+from repro.models.sharding import shard
+from repro.optim.compression import Compressor
+from repro.optim.optimizers import Optimizer, apply_updates
+
+
+def build_train_step(model: Model, optimizer: Optimizer, *, microbatch: int = 1,
+                     lr: float = 0.05, compressor: Optional[Compressor] = None):
+    """Returns f(state, batch) -> (state, metrics). state = {params, opt, err, step}."""
+    comp = compressor or Compressor("none")
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb)
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        if microbatch == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def slice_mb(x):
+                b = x.shape[0]
+                return x.reshape((microbatch, b // microbatch) + x.shape[1:])
+
+            mbs = jax.tree_util.tree_map(slice_mb, batch)
+
+            def acc_body(carry, mb):
+                loss_acc, grad_acc = carry
+                mb = jax.tree_util.tree_map(
+                    lambda x: shard(x, "batch", *([None] * (x.ndim - 1))), mb)
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                grad_acc = jax.tree_util.tree_map(jnp.add, grad_acc, grads)
+                return (loss_acc + loss, grad_acc), None
+
+            zero = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+            (loss, grads), _ = jax.lax.scan(acc_body, (jnp.zeros((), jnp.float32), zero), mbs)
+            loss = loss / microbatch
+            grads = jax.tree_util.tree_map(lambda g: g / microbatch, grads)
+
+        err = state.get("err", ())
+        if comp.scheme != "none":
+            grads, err = comp.roundtrip(grads, err)
+
+        updates, opt_state = optimizer.update(grads, state["opt"], params, lr)
+        params = apply_updates(params, updates)
+        new_state = {"params": params, "opt": opt_state, "err": err,
+                     "step": state["step"] + 1}
+        gnorm = jax.tree_util.tree_reduce(
+            lambda a, g: a + jnp.sum(jnp.square(g.astype(jnp.float32))), grads, 0.0)
+        return new_state, {"loss": loss, "grad_norm": jnp.sqrt(gnorm)}
+
+    return train_step
+
+
+def init_train_state(model: Model, optimizer: Optimizer, key,
+                     compressor: Optional[Compressor] = None):
+    params = model.init(key)
+    comp = compressor or Compressor("none")
+    return {"params": params, "opt": optimizer.init(params),
+            "err": comp.init_error(params) if comp.scheme != "none" else (),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def build_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def build_decode_step(model: Model):
+    def decode_step(params, cache, tokens, cache_len):
+        logits, new_cache = model.decode_step(params, cache, tokens, cache_len)
+        # greedy next token (serving semantics)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, logits, new_cache
+
+    return decode_step
+
+
+def cast_params(params, dtype):
+    return jax.tree_util.tree_map(
+        lambda p: p.astype(dtype) if jnp.issubdtype(p.dtype, jnp.floating) else p, params)

@@ -1,0 +1,328 @@
+"""Attention: GQA / MHA / cross-attention / MLA, with KV-cache decode.
+
+Three implementations of the core softmax-attention compute:
+  naive   - materialize (Sq, Sk) scores; smoke tests + oracle
+  chunked - flash-style online softmax over KV chunks in pure jnp; the
+            dry-run/default path (never materializes Sq x Sk)
+  pallas  - kernels/flash_attention.py (TPU Mosaic target; interpret-mode
+            validated on CPU)
+
+Decode shards the KV cache sequence dim over the ``kvseq`` logical axis
+(context-parallel decode): softmax over a sharded axis lowers to tiny
+all-reduces of the per-shard max/denominator.
+"""
+from __future__ import annotations
+
+import math
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_norm, apply_rope, dense_init
+from repro.models.sharding import shard  # noqa: F401  (used throughout)
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def gqa_params(key, cfg, dtype=jnp.float32, cross: bool = False):
+    hd = cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, dtype,
+                         scale=1.0 / math.sqrt(cfg.n_heads * hd)),
+    }
+
+
+def mla_params(key, cfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    qk_dim = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    return {
+        "wq_a": dense_init(ks[0], cfg.d_model, cfg.q_lora_rank, dtype),
+        "q_norm": {"scale": jnp.ones((cfg.q_lora_rank,), dtype)},
+        "wq_b": dense_init(ks[1], cfg.q_lora_rank, cfg.n_heads * qk_dim, dtype),
+        "wkv_a": dense_init(ks[2], cfg.d_model, cfg.kv_lora_rank + cfg.qk_rope_head_dim, dtype),
+        "kv_norm": {"scale": jnp.ones((cfg.kv_lora_rank,), dtype)},
+        "wkv_b": dense_init(ks[3], cfg.kv_lora_rank,
+                            cfg.n_heads * (cfg.qk_nope_head_dim + cfg.v_head_dim), dtype),
+        "wo": dense_init(ks[4], cfg.n_heads * cfg.v_head_dim, cfg.d_model, dtype),
+    }
+
+
+def attn_params(key, cfg, dtype=jnp.float32, cross: bool = False):
+    if cfg.use_mla and not cross:
+        return mla_params(key, cfg, dtype)
+    return gqa_params(key, cfg, dtype, cross=cross)
+
+
+# ---------------------------------------------------------------------------
+# core attention computations
+# ---------------------------------------------------------------------------
+
+
+def _group(q, n_kv):
+    """(B,S,H,hd) -> (B,S,K,G,hd) grouped query heads."""
+    B, S, H, hd = q.shape
+    return q.reshape(B, S, n_kv, H // n_kv, hd)
+
+
+def naive_attention(q, k, v, *, causal: bool, q_offset=0, kv_len: Optional[jax.Array] = None):
+    """Oracle attention. q:(B,Sq,H,hd) k,v:(B,Sk,K,hd)."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    qg = _group(q, K)
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    Sk = k.shape[1]
+    kv_idx = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        q_idx = jnp.arange(Sq) + q_offset
+        mask = kv_idx[None, :] <= q_idx[:, None]
+    if kv_len is not None:
+        mask = mask & (kv_idx[None, :] < kv_len)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_offset=0, chunk: int = 1024):
+    """Flash-style online-softmax attention, scanning KV chunks.
+
+    Never materializes the (Sq, Sk) score matrix; per-step live memory is
+    O(Sq * chunk). This is the HLO the dry-run sees for prefill/train.
+
+    Layout: everything runs in full-H (B, H, ...) form — GQA KV heads are
+    broadcast to H *inside* each chunk — because the grouped (B, K, G, ...)
+    layout cannot shard K=8 kv-heads over a 16-way tensor axis and forces the
+    SPMD partitioner to replicate the scan carries (observed: 40GB+ carries).
+    With full-H, every tensor shards (batch, tp) cleanly, including the
+    online-softmax carries, which we constrain explicitly.
+    """
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    vd = v.shape[-1]
+    G = H // K
+    Sk = k.shape[1]
+    chunk = min(chunk, Sk)
+    n_chunks = -(-Sk // chunk)
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = jnp.moveaxis(k.reshape(B, n_chunks, chunk, K, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, n_chunks, chunk, K, vd), 1, 0)
+
+    qh = q.transpose(0, 2, 1, 3).astype(jnp.float32) / math.sqrt(hd)  # (B,H,Sq,hd)
+    qh = shard(qh, "batch", "tp", None, None)
+    q_idx = jnp.arange(Sq) + q_offset
+
+    def expand(blk):  # (B,chunk,K,d) -> (B,H,chunk,d)
+        e = jnp.broadcast_to(blk.transpose(0, 2, 1, 3)[:, :, None],
+                             (B, K, G, chunk, blk.shape[-1]))
+        return e.reshape(B, H, chunk, blk.shape[-1])
+
+    # bf16 score/probability tensors (fp32 online-softmax statistics and
+    # accumulator) — standard TPU practice; halves the dominant HBM traffic
+    # of the jnp fallback path. Toggled by the execution choice (hillclimb).
+    lowp = os.environ.get("REPRO_ATTN_BF16", "0") == "1"
+
+    def step(carry, xs):
+        m, l, acc = carry
+        k_blk, v_blk, c = xs
+        kdt = jnp.bfloat16 if lowp else jnp.float32
+        kh = shard(expand(k_blk).astype(kdt), "batch", "tp", None, None)
+        vh = shard(expand(v_blk).astype(kdt), "batch", "tp", None, None)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qh.astype(kdt), kh,
+                       preferred_element_type=jnp.float32)
+        kv_idx = c * chunk + jnp.arange(chunk)
+        mask = kv_idx[None, :] < Sk
+        if causal:
+            mask = mask & (kv_idx[None, :] <= q_idx[:, None])
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_blk = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_blk)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = shard(l * corr + p.sum(-1), "batch", "tp", None)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(kdt), vh,
+            preferred_element_type=jnp.float32)
+        acc_new = shard(acc_new, "batch", "tp", None, None)
+        return (shard(m_new, "batch", "tp", None), l_new, acc_new), None
+
+    m0 = shard(jnp.full((B, H, Sq), -jnp.inf, jnp.float32), "batch", "tp", None)
+    l0 = shard(jnp.zeros((B, H, Sq), jnp.float32), "batch", "tp", None)
+    a0 = shard(jnp.zeros((B, H, Sq, vd), jnp.float32), "batch", "tp", None, None)
+    # checkpoint each chunk step: the backward recomputes s/p per chunk
+    # instead of saving O(Sq*Sk) probability residuals (flash-style backward)
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(step), (m0, l0, a0),
+                                  (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 2, 1, 3)  # (B,Sq,H,vd)
+    return out.astype(q.dtype)
+
+
+def attention_impl(q, k, v, *, causal, q_offset=0, impl: str = "chunked", chunk: int = 1024):
+    if impl == "naive":
+        return naive_attention(q, k, v, causal=causal, q_offset=q_offset)
+    if impl == "chunked":
+        return chunked_attention(q, k, v, causal=causal, q_offset=q_offset, chunk=chunk)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal, q_offset=q_offset)
+    raise ValueError(impl)
+
+
+# ---------------------------------------------------------------------------
+# GQA block forward (train / prefill / cross) and decode
+# ---------------------------------------------------------------------------
+
+
+def gqa_forward(p, x, cfg, *, positions=None, kv_x=None, causal=True,
+                impl="chunked", chunk=1024, return_kv=False):
+    """Self-attention (kv_x=None) or cross-attention (kv_x=encoder states)."""
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    src = x if kv_x is None else kv_x
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (src @ p["wk"]).reshape(B, src.shape[1], cfg.n_kv_heads, hd)
+    v = (src @ p["wv"]).reshape(B, src.shape[1], cfg.n_kv_heads, hd)
+    q = shard(q, "batch", "seq", "tp", None)
+    k = shard(k, "batch", "seq", "tp", None)
+    v = shard(v, "batch", "seq", "tp", None)
+    if positions is not None and kv_x is None and cfg.pos_embedding == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    out = attention_impl(q, k, v, causal=causal and kv_x is None, impl=impl, chunk=chunk)
+    out = shard(out, "batch", "seq", "tp", None)
+    y = out.reshape(B, S, cfg.n_heads * hd) @ p["wo"]
+    if return_kv:
+        # cache layout: sequence dim sharded over kvseq (context-parallel
+        # decode) so the prefill scan's ys accumulator shards too
+        return y, {"k": shard(k, "batch", "kvseq", None, None),
+                   "v": shard(v, "batch", "kvseq", None, None)}
+    return y
+
+
+def init_gqa_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    hd = cfg.head_dim
+    shape = (batch, max_seq, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gqa_decode(p, x, cache, cache_len, cfg, *, cross_kv=None):
+    """One-token decode. x: (B,1,d); cache k/v: (B,Smax,K,hd); cache_len: scalar."""
+    B = x.shape[0]
+    hd = cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, 1, cfg.n_heads, hd)
+    if cross_kv is not None:
+        k, v = cross_kv
+        out = naive_attention(q, k, v, causal=False)
+        new_cache = cache
+    else:
+        k_new = (x @ p["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
+        v_new = (x @ p["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
+        if cfg.pos_embedding == "rope":
+            pos = jnp.full((B, 1), cache_len, jnp.int32)
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k_new = apply_rope(k_new, pos, cfg.rope_theta)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), cache_len, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), cache_len, 1)
+        ck = shard(ck, "batch", "kvseq", None, None)
+        cv = shard(cv, "batch", "kvseq", None, None)
+        new_cache = {"k": ck, "v": cv}
+        out = naive_attention(q, ck, cv, causal=False, kv_len=cache_len + 1)
+    y = out.reshape(B, 1, cfg.n_heads * hd) @ p["wo"]
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v3): latent KV cache; decode uses the absorbed form
+# ---------------------------------------------------------------------------
+
+
+def _mla_qkv(p, x, cfg, positions):
+    B, S, _ = x.shape
+    nope, rope_d = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q = apply_norm(p["q_norm"], x @ p["wq_a"], "rmsnorm") @ p["wq_b"]
+    q = q.reshape(B, S, cfg.n_heads, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    kv_a = x @ p["wkv_a"]
+    latent = apply_norm(p["kv_norm"], kv_a[..., :cfg.kv_lora_rank], "rmsnorm")
+    k_rope = kv_a[..., cfg.kv_lora_rank:].reshape(B, S, 1, rope_d)
+    if positions is not None:
+        q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+        k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope, latent, k_rope[..., 0, :]
+
+
+def mla_forward(p, x, cfg, *, positions, impl="chunked", chunk=1024, return_cache=False):
+    B, S, _ = x.shape
+    nope, v_dim = cfg.qk_nope_head_dim, cfg.v_head_dim
+    q_nope, q_rope, latent, k_rope = _mla_qkv(p, x, cfg, positions)
+    kv = (latent @ p["wkv_b"]).reshape(B, S, cfg.n_heads, nope + v_dim)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, cfg.n_heads, k_rope.shape[-1]))], -1)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    q = shard(q, "batch", "seq", "tp", None)
+    k = shard(k, "batch", "seq", "tp", None)
+    v = shard(v, "batch", "seq", "tp", None)
+    out = attention_impl(q, k, v, causal=True, impl=impl, chunk=chunk)
+    out = out.reshape(B, S, cfg.n_heads * v_dim)
+    y = out @ p["wo"]
+    if return_cache:
+        return y, {"latent": shard(latent, "batch", "kvseq", None),
+                   "k_rope": shard(k_rope, "batch", "kvseq", None)}
+    return y
+
+
+def init_mla_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    return {
+        "latent": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_seq, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode(p, x, cache, cache_len, cfg):
+    """Absorbed-matrix MLA decode: attention runs in the latent space.
+
+    scores = q_nope . W_UK^T . latent  +  q_rope . k_rope
+    out    = (probs . latent) . W_UV -> wo
+    The KV cache is only (kv_lora_rank + rope_dim) wide per position.
+    """
+    B = x.shape[0]
+    nope, v_dim, rope_d = cfg.qk_nope_head_dim, cfg.v_head_dim, cfg.qk_rope_head_dim
+    pos = jnp.full((B, 1), cache_len, jnp.int32)
+    q_nope, q_rope, latent_new, k_rope_new = _mla_qkv(p, x, cfg, pos)
+
+    lat = jax.lax.dynamic_update_slice_in_dim(
+        cache["latent"], latent_new.astype(cache["latent"].dtype), cache_len, 1)
+    kr = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), cache_len, 1)
+    lat = shard(lat, "batch", "kvseq", None)
+    kr = shard(kr, "batch", "kvseq", None)
+
+    wkv_b = p["wkv_b"].reshape(cfg.kv_lora_rank, cfg.n_heads, nope + v_dim)
+    w_uk, w_uv = wkv_b[..., :nope], wkv_b[..., nope:]
+    # absorb W_UK into the query:  (B,1,H,nope) x (r,H,nope) -> (B,1,H,r)
+    q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
+    scale = 1.0 / math.sqrt(nope + rope_d)
+    s = (jnp.einsum("bqhr,bsr->bhqs", q_lat, lat.astype(jnp.float32))
+         + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32), kr.astype(jnp.float32))) * scale
+    kv_idx = jnp.arange(lat.shape[1])
+    s = jnp.where((kv_idx < cache_len + 1)[None, None, None], s, -1e30)
+    probs = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", probs, lat.astype(jnp.float32))
+    out = jnp.einsum("bqhr,rhv->bqhv", ctx, w_uv.astype(jnp.float32)).astype(x.dtype)
+    y = out.reshape(B, 1, cfg.n_heads * v_dim) @ p["wo"]
+    return y, {"latent": lat, "k_rope": kr}

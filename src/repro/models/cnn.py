@@ -1,0 +1,216 @@
+"""The paper's CNN workloads: ResNet34, MobileNetV2, ShuffleNetV2 (NHWC).
+
+MobileNet/ShuffleNet are depthwise-convolution-heavy — the op class whose
+multi-core cache-thrashing motivates Swan's choice pruning (paper §3.1). The
+depthwise convs route through kernels/ops.py so the Pallas TPU kernel is used
+when impl="pallas" (interpret-mode on CPU), else the jnp reference.
+
+Normalization uses channel GroupNorm instead of BatchNorm (functional, no
+running stats); FLOP/byte profile is equivalent for throughput studies
+(DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d(x, w, stride=1, groups=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"), feature_group_count=groups)
+
+
+def depthwise_conv2d(x, w, stride=1, impl="jnp"):
+    """x: (B,H,W,C), w: (kh,kw,1,C)."""
+    if impl == "pallas" and stride == 1:
+        from repro.kernels import ops as kops
+        return kops.depthwise_conv(x, w[:, :, 0, :])
+    return conv2d(x, w, stride=stride, groups=x.shape[-1])
+
+
+def _gn(p, x, groups=8):
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    while C % g:
+        g -= 1
+    xf = x.astype(jnp.float32).reshape(B, H, W, g, C // g)
+    mu = xf.mean((1, 2, 4), keepdims=True)
+    var = ((xf - mu) ** 2).mean((1, 2, 4), keepdims=True)
+    xf = ((xf - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(B, H, W, C)
+    return (xf * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def _conv_init(key, kh, kw, cin, cout, dtype=jnp.float32):
+    fan = kh * kw * cin
+    return (jax.random.normal(key, (kh, kw, cin, cout)) * (2.0 / fan) ** 0.5).astype(dtype)
+
+
+def _norm_init(c, dtype=jnp.float32):
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
+
+
+# --------------------------- ResNet34 --------------------------------------
+
+def _init_resnet(key, cfg, dtype):
+    ks = iter(jax.random.split(key, 200))
+    p = {"stem": {"w": _conv_init(next(ks), 3, 3, cfg.in_channels, cfg.cnn_widths[0], dtype),
+                  "n": _norm_init(cfg.cnn_widths[0], dtype)}, "stages": []}
+    cin = cfg.cnn_widths[0]
+    for w, n in zip(cfg.cnn_widths, cfg.cnn_stages):
+        stage = []
+        for b in range(n):
+            blk = {"w1": _conv_init(next(ks), 3, 3, cin, w, dtype), "n1": _norm_init(w, dtype),
+                   "w2": _conv_init(next(ks), 3, 3, w, w, dtype), "n2": _norm_init(w, dtype)}
+            if cin != w:
+                blk["proj"] = _conv_init(next(ks), 1, 1, cin, w, dtype)
+            stage.append(blk)
+            cin = w
+        p["stages"].append(stage)
+    p["fc"] = (jax.random.normal(next(ks), (cin, cfg.n_classes)) * 0.01).astype(dtype)
+    return p
+
+
+def _apply_resnet(p, x, cfg, impl):
+    x = jax.nn.relu(_gn(p["stem"]["n"], conv2d(x, p["stem"]["w"])))
+    for si, stage in enumerate(p["stages"]):
+        for bi, blk in enumerate(stage):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            h = jax.nn.relu(_gn(blk["n1"], conv2d(x, blk["w1"], stride=stride)))
+            h = _gn(blk["n2"], conv2d(h, blk["w2"]))
+            skip = x
+            if "proj" in blk:
+                skip = conv2d(x, blk["proj"], stride=stride)
+            elif stride != 1:
+                skip = x[:, ::stride, ::stride]
+            x = jax.nn.relu(h + skip)
+    x = x.mean((1, 2))
+    return x @ p["fc"]
+
+
+# --------------------------- MobileNetV2 ------------------------------------
+
+_MBN_STRIDES = (1, 2, 2, 2, 1, 2, 1)
+
+
+def _init_mobilenet(key, cfg, dtype):
+    ks = iter(jax.random.split(key, 300))
+    stem_c = 32
+    p = {"stem": {"w": _conv_init(next(ks), 3, 3, cfg.in_channels, stem_c, dtype),
+                  "n": _norm_init(stem_c, dtype)}, "stages": []}
+    cin = stem_c
+    for w, n, s in zip(cfg.cnn_widths, cfg.cnn_stages, _MBN_STRIDES):
+        stage = []
+        for b in range(n):
+            exp = cin * 6 if cin != 16 else cin
+            blk = {"we": _conv_init(next(ks), 1, 1, cin, exp, dtype), "ne": _norm_init(exp, dtype),
+                   "wd": _conv_init(next(ks), 3, 3, 1, exp, dtype), "nd": _norm_init(exp, dtype),
+                   "wp": _conv_init(next(ks), 1, 1, exp, w, dtype), "np_": _norm_init(w, dtype)}
+            stage.append(blk)
+            cin = w
+        p["stages"].append(stage)
+    head_c = 1280
+    p["head"] = {"w": _conv_init(next(ks), 1, 1, cin, head_c, dtype), "n": _norm_init(head_c, dtype)}
+    p["fc"] = (jax.random.normal(next(ks), (head_c, cfg.n_classes)) * 0.01).astype(dtype)
+    return p
+
+
+def _apply_mobilenet(p, x, cfg, impl):
+    x = jax.nn.relu6(_gn(p["stem"]["n"], conv2d(x, p["stem"]["w"], stride=1)))
+    for si, stage in enumerate(p["stages"]):
+        for bi, blk in enumerate(stage):
+            stride = _MBN_STRIDES[si] if bi == 0 else 1
+            h = jax.nn.relu6(_gn(blk["ne"], conv2d(x, blk["we"])))
+            h = jax.nn.relu6(_gn(blk["nd"], depthwise_conv2d(h, blk["wd"],
+                                                             stride=stride, impl=impl)))
+            h = _gn(blk["np_"], conv2d(h, blk["wp"]))
+            if stride == 1 and x.shape[-1] == h.shape[-1]:
+                h = h + x
+            x = h
+    x = jax.nn.relu6(_gn(p["head"]["n"], conv2d(x, p["head"]["w"])))
+    return x.mean((1, 2)) @ p["fc"]
+
+
+# --------------------------- ShuffleNetV2 -----------------------------------
+
+def _channel_shuffle(x, groups=2):
+    B, H, W, C = x.shape
+    return x.reshape(B, H, W, groups, C // groups).swapaxes(3, 4).reshape(B, H, W, C)
+
+
+def _init_shufflenet(key, cfg, dtype):
+    ks = iter(jax.random.split(key, 300))
+    stem_c = 24
+    p = {"stem": {"w": _conv_init(next(ks), 3, 3, cfg.in_channels, stem_c, dtype),
+                  "n": _norm_init(stem_c, dtype)}, "stages": []}
+    cin = stem_c
+    for w, n in zip(cfg.cnn_widths, cfg.cnn_stages):
+        stage = []
+        for b in range(n):
+            if b == 0:  # downsample unit: both branches convolved, concat doubles
+                half = w // 2
+                blk = {"l_wd": _conv_init(next(ks), 3, 3, 1, cin, dtype), "l_nd": _norm_init(cin, dtype),
+                       "l_wp": _conv_init(next(ks), 1, 1, cin, half, dtype), "l_np": _norm_init(half, dtype),
+                       "r_w1": _conv_init(next(ks), 1, 1, cin, half, dtype), "r_n1": _norm_init(half, dtype),
+                       "r_wd": _conv_init(next(ks), 3, 3, 1, half, dtype), "r_nd": _norm_init(half, dtype),
+                       "r_wp": _conv_init(next(ks), 1, 1, half, w - half, dtype), "r_np": _norm_init(w - half, dtype)}
+            else:
+                half = w // 2
+                blk = {"r_w1": _conv_init(next(ks), 1, 1, half, half, dtype), "r_n1": _norm_init(half, dtype),
+                       "r_wd": _conv_init(next(ks), 3, 3, 1, half, dtype), "r_nd": _norm_init(half, dtype),
+                       "r_wp": _conv_init(next(ks), 1, 1, half, half, dtype), "r_np": _norm_init(half, dtype)}
+            stage.append(blk)
+            cin = w
+        p["stages"].append(stage)
+    head_c = 1024
+    p["head"] = {"w": _conv_init(next(ks), 1, 1, cin, head_c, dtype), "n": _norm_init(head_c, dtype)}
+    p["fc"] = (jax.random.normal(next(ks), (head_c, cfg.n_classes)) * 0.01).astype(dtype)
+    return p
+
+
+def _apply_shufflenet(p, x, cfg, impl):
+    x = jax.nn.relu(_gn(p["stem"]["n"], conv2d(x, p["stem"]["w"], stride=1)))
+    for stage in p["stages"]:
+        for blk in stage:
+            if "l_wd" in blk:  # downsample unit
+                left = _gn(blk["l_nd"], depthwise_conv2d(x, blk["l_wd"], stride=2, impl=impl))
+                left = jax.nn.relu(_gn(blk["l_np"], conv2d(left, blk["l_wp"])))
+                r = jax.nn.relu(_gn(blk["r_n1"], conv2d(x, blk["r_w1"])))
+                r = _gn(blk["r_nd"], depthwise_conv2d(r, blk["r_wd"], stride=2, impl=impl))
+                r = jax.nn.relu(_gn(blk["r_np"], conv2d(r, blk["r_wp"])))
+                x = jnp.concatenate([left, r], -1)
+            else:
+                half = x.shape[-1] // 2
+                left, r = x[..., :half], x[..., half:]
+                r = jax.nn.relu(_gn(blk["r_n1"], conv2d(r, blk["r_w1"])))
+                r = _gn(blk["r_nd"], depthwise_conv2d(r, blk["r_wd"], impl=impl))
+                r = jax.nn.relu(_gn(blk["r_np"], conv2d(r, blk["r_wp"])))
+                x = jnp.concatenate([left, r], -1)
+            x = _channel_shuffle(x)
+    x = jax.nn.relu(_gn(p["head"]["n"], conv2d(x, p["head"]["w"])))
+    return x.mean((1, 2)) @ p["fc"]
+
+
+# --------------------------- public API -------------------------------------
+
+_INITS = {"resnet": _init_resnet, "mobilenet": _init_mobilenet, "shufflenet": _init_shufflenet}
+_APPLYS = {"resnet": _apply_resnet, "mobilenet": _apply_mobilenet, "shufflenet": _apply_shufflenet}
+
+
+def init_cnn(key, cfg, dtype=jnp.float32):
+    return _INITS[cfg.cnn_kind](key, cfg, dtype)
+
+
+def forward_cnn(params, cfg, images, impl="jnp"):
+    return _APPLYS[cfg.cnn_kind](params, images, cfg, impl)
+
+
+def loss_cnn(params, cfg, batch, impl="jnp"):
+    logits = forward_cnn(params, cfg, batch["images"], impl=impl).astype(jnp.float32)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, labels[:, None], 1)[:, 0]
+    return (logz - gold).mean()

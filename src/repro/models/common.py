@@ -1,0 +1,115 @@
+"""Shared layer primitives (pure JAX, functional params-as-dicts)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import shard
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: Optional[float] = None):
+    s = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * s).astype(dtype)
+
+
+def norm_params(cfg, dtype=jnp.float32):
+    p = {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def apply_norm(p, x, kind: str, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        return (xf * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = xf * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        out = out + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def activate(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(kind)
+
+
+def mlp_params(key, cfg, d_ff: Optional[int] = None, dtype=jnp.float32):
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], cfg.d_model, ff, dtype),
+         "w_down": dense_init(ks[1], ff, cfg.d_model, dtype)}
+    if cfg.activation != "relu2":  # gated (SwiGLU / GeGLU)
+        p["w_gate"] = dense_init(ks[2], cfg.d_model, ff, dtype)
+    return p
+
+
+def apply_mlp(p, x, activation: str):
+    h = activate(x @ p.get("w_gate", p["w_up"]), activation)
+    if "w_gate" in p:
+        h = h * (x @ p["w_up"])
+    h = shard(h, "batch", "seq", "tp")
+    return h @ p["w_down"]
+
+
+# --- rotary embeddings ------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd) rotated pairwise; positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int, dtype=jnp.float32):
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d_model)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1).astype(dtype)[:, :d_model]
+
+
+def embed_tokens(embed, tokens):
+    """Sharded-friendly embedding lookup via one-hot-free take."""
+    out = jnp.take(embed, tokens, axis=0)
+    return shard(out, "batch", "seq", None)
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean next-token CE in fp32; labels == -1 are ignored.
+
+    The gold logit is extracted with a masked reduction (iota compare) rather
+    than take_along_axis: a gather over a vocab-sharded logits tensor forces
+    SPMD to replicate it ("involuntary full rematerialization"), while the
+    masked reduce partitions cleanly (per-shard partial + all-reduce).
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    onehot = vocab_iota == jnp.maximum(labels, 0)[..., None]
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = logz - gold
+    valid = (labels >= 0) if mask is None else mask & (labels >= 0)
+    nll = jnp.where(valid, nll, 0.0)
+    return nll.sum() / jnp.maximum(valid.sum(), 1)

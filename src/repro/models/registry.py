@@ -1,0 +1,78 @@
+"""Unified Model API over all families.
+
+``build_model(cfg)`` returns a ``Model`` whose functions are pure (params and
+batch in, arrays out) so they can be jitted/AOT-lowered with ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import cnn, encdec, transformer
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable[[Any], Any]  # rng -> params
+    forward: Callable[[Any, dict], Any]  # (params, batch) -> logits
+    loss: Callable[[Any, dict], Any]  # (params, batch) -> scalar
+    prefill: Optional[Callable] = None  # (params, batch) -> (logits, cache)
+    init_cache: Optional[Callable] = None  # (batch, max_len, dtype) -> cache
+    decode_step: Optional[Callable] = None  # (params, cache, tokens, cache_len) -> (logits, cache)
+
+
+def build_model(cfg: ModelConfig, *, impl: str = "chunked", chunk: int = 1024,
+                remat: str = "none", param_dtype=jnp.float32,
+                moe_cf: float = 1.25) -> Model:
+    if cfg.family == "cnn":
+        return Model(
+            cfg=cfg,
+            init=lambda key: cnn.init_cnn(key, cfg, param_dtype),
+            forward=lambda p, b: cnn.forward_cnn(p, cfg, b["images"],
+                                                 impl="pallas" if impl == "pallas" else "jnp"),
+            loss=lambda p, b: cnn.loss_cnn(p, cfg, b,
+                                           impl="pallas" if impl == "pallas" else "jnp"),
+        )
+
+    if cfg.family == "encdec":
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_encdec(key, cfg, param_dtype),
+            forward=lambda p, b: encdec.forward_encdec(
+                p, cfg, b["tokens"], b["audio_embed"], impl=impl, chunk=chunk, remat=remat),
+            loss=lambda p, b: encdec.loss_encdec(p, cfg, b, impl=impl, chunk=chunk, remat=remat),
+            prefill=lambda p, b: encdec.forward_encdec(
+                p, cfg, b["tokens"], b["audio_embed"], impl=impl, chunk=chunk,
+                return_cache=True),
+            init_cache=lambda batch, max_len, dtype=jnp.bfloat16: encdec.init_cache_encdec(
+                cfg, batch, max_len, dtype),
+            decode_step=lambda p, cache, tokens, cache_len: encdec.decode_step_encdec(
+                p, cfg, cache, tokens, cache_len),
+        )
+
+    def fwd(p, b):
+        logits, aux, h = transformer.forward_decoder(
+            p, cfg, b["tokens"], image_embed=b.get("image_embed"),
+            audio_embed=b.get("audio_embed"), impl=impl, chunk=chunk, remat=remat,
+            moe_cf=moe_cf)
+        return logits
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init_decoder(key, cfg, param_dtype),
+        forward=fwd,
+        loss=lambda p, b: transformer.loss_decoder(p, cfg, b, impl=impl, chunk=chunk,
+                                                   remat=remat, moe_cf=moe_cf),
+        prefill=lambda p, b: transformer.prefill_decoder(
+            p, cfg, b["tokens"], image_embed=b.get("image_embed"),
+            audio_embed=b.get("audio_embed"), impl=impl, chunk=chunk, moe_cf=moe_cf),
+        init_cache=lambda batch, max_len, dtype=jnp.bfloat16: transformer.init_cache_decoder(
+            cfg, batch, max_len, dtype),
+        decode_step=lambda p, cache, tokens, cache_len: transformer.decode_step_decoder(
+            p, cfg, cache, tokens, cache_len, impl=impl, moe_cf=moe_cf),
+    )

@@ -1,0 +1,2 @@
+from repro.optim.optimizers import adam, sgd, apply_updates  # noqa: F401
+from repro.optim.schedule import cosine_schedule, warmup_linear  # noqa: F401

@@ -1,0 +1,2 @@
+from repro.runtime.fault import FaultModel, StragglerPolicy  # noqa: F401
+from repro.runtime.elastic import ElasticController  # noqa: F401

@@ -1,0 +1,75 @@
+"""Elastic re-meshing: Swan's migration loop applied to a device pool.
+
+The controller owns a device pool; when capacity changes (failures from
+FaultModel, or co-tenant pressure from the interference monitor), it asks the
+Swan planner for the best *surviving* execution choice and produces a new
+mesh. Training resumes from the latest checkpoint via
+``CheckpointManager.restore_latest(mesh=new_mesh)`` — parameters re-shard on
+restore, so the migration cost is one checkpoint round-trip (exactly the
+downgrade/upgrade transition of paper Fig. 4b, with save/restore standing in
+for the thread-affinity switch).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class ElasticController:
+    total_devices: int
+    min_devices: int = 1
+    # candidate mesh shapes in Swan cost order (costliest/fastest first)
+    candidates: Optional[List[Tuple[int, ...]]] = None
+
+    def __post_init__(self):
+        if self.candidates is None:
+            self.candidates = default_mesh_ladder(self.total_devices)
+        self._healthy = np.ones(self.total_devices, bool)
+
+    def mark_failed(self, idx: Sequence[int]):
+        self._healthy[np.asarray(idx, dtype=np.int64)] = False
+
+    def mark_recovered(self, idx: Sequence[int]):
+        self._healthy[np.asarray(idx, dtype=np.int64)] = True
+
+    @property
+    def n_healthy(self) -> int:
+        return int(self._healthy.sum())
+
+    def current_shape(self) -> Tuple[int, ...]:
+        """Largest candidate mesh that fits in the healthy pool."""
+        n = self.n_healthy
+        for shape in self.candidates:
+            size = int(np.prod(shape))
+            if size <= n:
+                return shape
+        return self.candidates[-1]
+
+    def make_mesh(self, axis_names=("data", "model"), devices=None):
+        shape = self.current_shape()
+        devices = devices if devices is not None else jax.devices()
+        healthy = [d for d, ok in zip(devices, self._healthy) if ok]
+        size = int(np.prod(shape))
+        devs = np.array(healthy[:size]).reshape(shape)
+        names = axis_names[-len(shape):]
+        return jax.sharding.Mesh(devs, names)
+
+
+def default_mesh_ladder(total: int) -> List[Tuple[int, ...]]:
+    """Swan-ordered ladder of (data, model) shapes: fastest (all devices)
+    first, then progressively cheaper submeshes (power-of-two downgrades)."""
+    ladder: List[Tuple[int, ...]] = []
+    n = 1
+    while n * 2 <= total:
+        n *= 2
+    while n >= 1:
+        model = 1
+        while model * model <= n and model < 32:
+            model *= 2
+        ladder.append((n // model, model))
+        n //= 2
+    return ladder

@@ -1,0 +1,58 @@
+"""Fault tolerance & straggler mitigation policies.
+
+At fleet scale, Swan's "interference" becomes node failure / preemption /
+stragglers. Two standard mitigations implemented here, both driven by the same
+profiles the Swan planner maintains:
+
+- FaultModel: exponential per-node MTBF; decides which nodes die during a
+  step window. Drives both the FL simulator and the elastic-train example.
+- StragglerPolicy: over-provisioned participation + deadline. Select
+  ceil(K * over_provision) participants, accept the first K results within
+  ``deadline_factor * median_latency`` (FedScale/Papaya-style); the laggards'
+  work is dropped, so one slow node never stalls the round.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class FaultModel:
+    mtbf_steps: float  # mean steps between failures per node
+    recovery_steps: float = 50.0
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def step_failures(self, n_nodes: int) -> np.ndarray:
+        """Bool mask of nodes that fail during this step."""
+        p = 1.0 / max(self.mtbf_steps, 1e-9)
+        return self._rng.random(n_nodes) < p
+
+    def recovery_time(self) -> int:
+        return int(self._rng.exponential(self.recovery_steps)) + 1
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerPolicy:
+    over_provision: float = 1.3
+    deadline_factor: float = 2.0
+
+    def n_to_invite(self, k: int) -> int:
+        return max(k, math.ceil(k * self.over_provision))
+
+    def accept(self, latencies: Sequence[float], k: int) -> np.ndarray:
+        """Indices of the first-k finishers within the deadline."""
+        lat = np.asarray(latencies, dtype=np.float64)
+        order = np.argsort(lat)
+        med = float(np.median(lat)) if len(lat) else 0.0
+        deadline = med * self.deadline_factor
+        accepted = [i for i in order if lat[i] <= deadline][:k]
+        if len(accepted) < min(k, len(lat)):  # fallback: take fastest k anyway
+            accepted = list(order[:k])
+        return np.asarray(accepted, dtype=np.int64)

@@ -1,0 +1,53 @@
+"""FL substrate: traces, selection, aggregation, simulator end-to-end."""
+import numpy as np
+import pytest
+
+from repro.fl.selection import OortSelector, random_selection
+from repro.fl.simulator import FLConfig, compare_policies, run_fl
+from repro.fl.traces import (BatteryTrace, generate_raw_trace, make_client_traces,
+                             passes_quality_filters, resample_trace)
+
+
+def test_generated_traces_pass_paper_filters():
+    rng = np.random.default_rng(7)
+    for _ in range(5):
+        ts, lv = generate_raw_trace(rng, days=29)
+        assert passes_quality_filters(ts)
+        tr = resample_trace(ts, lv)
+        assert tr.days >= 28
+        assert set(np.unique(tr.state)).issubset({-1, 0, 1})
+        assert 0.0 <= tr.level.min() and tr.level.max() <= 1.0
+
+
+def test_timezone_augmentation_counts():
+    traces = make_client_traces(2, seed=1, tz_shifts=24)
+    assert len(traces) == 48  # 2 base x 24 shifts (paper §A.2: 100 x 24 = 2400)
+    offsets = {t.start_offset_min for t in traces}
+    assert len(offsets) == 24
+
+
+def test_oort_prefers_high_utility():
+    sel = OortSelector(epsilon=0.0)
+    rng = np.random.default_rng(0)
+    for c in range(10):
+        sel.report(c, loss=2.0 if c < 5 else 0.1, n_samples=100, latency_s=1.0)
+    chosen = sel.select(rng, list(range(10)), 5, deadline_s=10.0)
+    assert set(chosen) == {0, 1, 2, 3, 4}
+
+
+def test_fl_swan_beats_baseline():
+    res = compare_policies("shufflenet-v2", rounds=60, n_clients=96,
+                           clients_per_round=16, seed=3)
+    tgt = min(res["baseline"].final_accuracy, res["swan"].final_accuracy)
+    tb = res["baseline"].time_to_accuracy(tgt)
+    ts = res["swan"].time_to_accuracy(tgt)
+    assert ts is not None and tb is not None and ts <= tb
+    assert res["swan"].total_energy_j < res["baseline"].total_energy_j
+
+
+def test_fl_sim_determinism():
+    cfg = FLConfig(workload="resnet34", n_clients=48, rounds=20,
+                   clients_per_round=8, seed=11)
+    a = run_fl(cfg)
+    b = run_fl(cfg)
+    assert [r.accuracy for r in a.rounds] == [r.accuracy for r in b.rounds]

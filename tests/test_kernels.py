@@ -1,0 +1,60 @@
+"""Per-kernel shape/dtype sweeps vs the ref.py jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [(1, 7, 64), (4, 3, 96), (2, 1, 128), (3, 17, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    x = jax.random.normal(KEY, shape, dtype)
+    s = jax.random.normal(jax.random.fold_in(KEY, 1), shape[-1:], dtype)
+    got = ops.rmsnorm(x, s)
+    want = ref.ref_rmsnorm(x, s)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("shape,k", [((2, 8, 8, 16), 3), ((1, 13, 11, 24), 3),
+                                     ((2, 16, 16, 8), 5), ((1, 32, 32, 32), 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_depthwise_sweep(shape, k, dtype):
+    x = jax.random.normal(KEY, shape, dtype)
+    w = jax.random.normal(jax.random.fold_in(KEY, 2), (k, k, shape[-1]), dtype)
+    got = ops.depthwise_conv(x, w)
+    want = ref.ref_depthwise_conv(x, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,S,H,K,hd", [(1, 16, 4, 4, 32), (2, 37, 8, 4, 16),
+                                        (1, 128, 8, 2, 64), (2, 64, 4, 1, 32)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(B, S, H, K, hd, causal):
+    q = jax.random.normal(KEY, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 3), (B, S, K, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 4), (B, S, K, hd))
+    from repro.models.attention import naive_attention
+    got = ops.flash_attention(q, k, v, causal=causal)
+    want = naive_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = jax.random.normal(KEY, (1, 64, 4, 32), jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(KEY, 5), (1, 64, 2, 32), jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(KEY, 6), (1, 64, 2, 32), jnp.bfloat16)
+    from repro.models.attention import naive_attention
+    got = ops.flash_attention(q, k, v, causal=True)
+    want = naive_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=5e-2, atol=5e-2)

@@ -1,0 +1,60 @@
+"""Optimizers, schedules, compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.compression import Compressor, quantize_int8, dequantize_int8, \
+    topk_densify, topk_sparsify
+from repro.optim.optimizers import adam, apply_updates, sgd
+from repro.optim.schedule import cosine_schedule, warmup_linear
+
+
+@pytest.mark.parametrize("make_opt,lr", [(lambda: sgd(), 0.1),
+                                         (lambda: sgd(momentum=0.9), 0.05),
+                                         (lambda: adam(), 0.05)])
+def test_optimizer_descends_quadratic(make_opt, lr):
+    opt = make_opt()
+    params = {"w": jnp.array([3.0, -2.0, 1.0])}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(120):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params, lr)
+        params = apply_updates(params, upd)
+    assert float(loss(params)) < 1e-2
+
+
+def test_schedules():
+    s = warmup_linear(1.0, 10)
+    assert float(s(0)) == pytest.approx(0.1)
+    assert float(s(9)) == pytest.approx(1.0)
+    c = cosine_schedule(1.0, 100, warmup_steps=10, min_ratio=0.1)
+    assert float(c(5)) < 1.0
+    assert float(c(99)) == pytest.approx(0.1, abs=0.02)
+
+
+def test_int8_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (256,))
+    q, s = quantize_int8(x)
+    back = dequantize_int8(q, s)
+    assert float(jnp.abs(back - x).max()) <= float(s) * 0.5 + 1e-6
+
+
+def test_topk_keeps_largest():
+    x = jnp.array([0.1, -5.0, 0.2, 3.0, -0.05])
+    vals, idx = topk_sparsify(x, 0.4)
+    dense = topk_densify(vals, idx, x.shape)
+    np.testing.assert_allclose(np.asarray(dense), [0, -5.0, 0, 3.0, 0])
+
+
+def test_compressor_ratio_and_none():
+    assert Compressor("none").ratio() == 1.0
+    assert Compressor("int8").ratio() == 0.25
+    assert Compressor("topk:0.1").ratio() == pytest.approx(0.2)
+    g = {"w": jnp.ones((8,))}
+    dec, err = Compressor("none").roundtrip(g, ())
+    assert dec is g

@@ -1,0 +1,108 @@
+"""Property-based tests (hypothesis) for system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.cost import ChoiceProfile, pareto_prune, total_order
+from repro.fl.aggregation import fedavg
+from repro.fl.traces import pchip_interpolate
+from repro.optim.compression import Compressor
+
+
+class _C:
+    def __init__(self, i):
+        self.name = f"c{i}"
+
+
+profiles_strategy = st.lists(
+    st.tuples(st.floats(0.01, 100.0), st.integers(0, 5), st.integers(0, 5)),
+    min_size=1, max_size=20,
+).map(lambda items: [
+    ChoiceProfile(choice=_C(i), latency_s=lat, energy_j=1.0, power_w=1.0,
+                  cost_key=(c1, c2))
+    for i, (lat, c1, c2) in enumerate(items)])
+
+
+@given(profiles_strategy)
+@settings(max_examples=100, deadline=None)
+def test_prune_never_removes_pareto_optimal(profs):
+    kept = pareto_prune(profs)
+    kept_ids = {p.name for p in kept}
+    for p in profs:
+        dominated = any(
+            (q.latency_s, q.cost_key) != (p.latency_s, p.cost_key)
+            and q.latency_s <= p.latency_s and q.cost_key <= p.cost_key
+            for q in profs)
+        if not dominated:
+            assert p.name in kept_ids or any(
+                q.latency_s == p.latency_s and q.cost_key == p.cost_key
+                for q in kept), f"pareto-optimal {p.name} pruned"
+
+
+@given(profiles_strategy)
+@settings(max_examples=100, deadline=None)
+def test_prune_ladder_strictly_cheaper_down(profs):
+    """Each successive survivor must strictly relinquish resources."""
+    kept = pareto_prune(profs)
+    for a, b in zip(kept, kept[1:]):
+        assert a.latency_s <= b.latency_s
+        assert b.cost_key < a.cost_key
+
+
+@given(profiles_strategy)
+@settings(max_examples=50, deadline=None)
+def test_total_order_sorted(profs):
+    ordered = total_order(profs)
+    lats = [p.latency_s for p in ordered]
+    assert lats == sorted(lats)
+
+
+@given(st.lists(st.floats(-5, 5), min_size=2, max_size=30),
+       st.integers(0, 1000))
+@settings(max_examples=50, deadline=None)
+def test_pchip_interpolates_knots_and_stays_in_range(ys, seed):
+    x = np.arange(len(ys), dtype=float)
+    y = np.asarray(ys)
+    got = pchip_interpolate(x, y, x)
+    np.testing.assert_allclose(got, y, rtol=1e-9, atol=1e-9)
+    rng = np.random.default_rng(seed)
+    xq = rng.uniform(0, len(ys) - 1, 50)
+    gq = pchip_interpolate(x, y, xq)
+    # shape-preserving: never overshoots the global data range
+    assert gq.min() >= y.min() - 1e-9 and gq.max() <= y.max() + 1e-9
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from(["int8", "topk:0.1", "int8+topk:0.25"]))
+@settings(max_examples=25, deadline=None)
+def test_compression_error_feedback_conserves_signal(seed, scheme):
+    """decompressed + error == original (+ carried error) exactly."""
+    comp = Compressor(scheme)
+    g = {"w": jax.random.normal(jax.random.PRNGKey(seed), (64,))}
+    err = comp.init_error(g)
+    dec, new_err = comp.roundtrip(g, err)
+    total = dec["w"].astype(jnp.float32) + new_err["w"]
+    np.testing.assert_allclose(np.asarray(total), np.asarray(g["w"]),
+                               rtol=2e-2, atol=2e-2)
+
+
+@given(st.integers(2, 6), st.integers(0, 100))
+@settings(max_examples=25, deadline=None)
+def test_fedavg_equal_weights_is_mean(n, seed):
+    key = jax.random.PRNGKey(seed)
+    base = {"w": jnp.zeros((8,))}
+    deltas = [{"w": jax.random.normal(jax.random.fold_in(key, i), (8,))}
+              for i in range(n)]
+    out = fedavg(base, deltas)
+    want = jnp.mean(jnp.stack([d["w"] for d in deltas]), 0)
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@given(st.floats(0.01, 1.0), st.booleans())
+@settings(max_examples=25, deadline=None)
+def test_compression_ratio_bounds(frac, use_int8):
+    scheme = (("int8+" if use_int8 else "") + f"topk:{frac}")
+    r = Compressor(scheme).ratio()
+    assert 0 < r <= 1.0

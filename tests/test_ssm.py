@@ -1,0 +1,62 @@
+"""Mamba2 / RWKV6: chunked full-sequence pass == sequential decode steps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm
+
+KEY = jax.random.PRNGKey(1)
+
+
+@pytest.fixture(scope="module")
+def mamba_cfg():
+    return ModelConfig(name="t", family="ssm", n_layers=1, d_model=32, n_heads=1,
+                       n_kv_heads=1, d_ff=64, vocab_size=64, ssm_state=8)
+
+
+@pytest.mark.parametrize("chunk", [3, 5, 19])
+def test_mamba2_chunked_vs_step(mamba_cfg, chunk):
+    p = ssm.mamba2_params(KEY, mamba_cfg)
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (2, 19, 32)) * 0.5
+    out_c, st_c = ssm.mamba2_forward(p, x, mamba_cfg, chunk=chunk, return_state=True)
+    st = ssm.init_mamba_state(mamba_cfg, 2)
+    outs = []
+    for t in range(19):
+        o, st = ssm.mamba2_decode(p, x[:, t:t + 1], st, mamba_cfg)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(jnp.concatenate(outs, 1)),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_c["h"]), np.asarray(st["h"]),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_c["conv"]), np.asarray(st["conv"]),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("chunk", [4, 6, 17])
+def test_rwkv6_chunked_vs_step(chunk):
+    cfg = ModelConfig(name="r", family="ssm", n_layers=1, d_model=32, n_heads=2,
+                      n_kv_heads=2, head_dim=16, d_ff=64, vocab_size=64)
+    p = ssm.rwkv6_params(KEY, cfg)
+    x = jax.random.normal(jax.random.fold_in(KEY, 2), (2, 17, 32)) * 0.5
+    out_c, S_c, _ = ssm.rwkv6_tmix(p["tmix"], x, cfg, chunk=chunk, return_state=True)
+    st = ssm.init_rwkv_state(cfg, 2)
+    S, prev = st["S"], st["prev_t"]
+    outs = []
+    for t in range(17):
+        o, S, prev = ssm.rwkv6_tmix_step(p["tmix"], x[:, t:t + 1], S, prev, cfg)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(jnp.concatenate(outs, 1)),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(S_c), np.asarray(S), rtol=2e-4, atol=2e-4)
+
+
+def test_rwkv6_cmix_shift():
+    cfg = ModelConfig(name="r", family="ssm", n_layers=1, d_model=16, n_heads=1,
+                      n_kv_heads=1, d_ff=32, vocab_size=64)
+    p = ssm.rwkv6_params(KEY, cfg)
+    x = jax.random.normal(jax.random.fold_in(KEY, 3), (2, 5, 16))
+    full, _ = ssm.rwkv6_cmix(p["cmix"], x)
+    step0, _ = ssm.rwkv6_cmix(p["cmix"], x[:, :1], prev=jnp.zeros((2, 16)))
+    np.testing.assert_allclose(np.asarray(full[:, :1]), np.asarray(step0), rtol=1e-6, atol=1e-6)

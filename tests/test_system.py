@@ -1,0 +1,67 @@
+"""End-to-end behaviour tests for the paper's system (O1-O5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy as E
+from repro.core.choices import CoreChoice
+from repro.core.planner import explore_soc
+from repro.core.profiler import greedy_baseline_profile, profile_soc_choice
+
+
+def test_O1_power_energy_inversion():
+    """Low power does not mean low energy (paper Fig. 2a)."""
+    m = E.SOC_MODELS["pixel3"]
+    little = profile_soc_choice(CoreChoice((0, 1, 2, 3), "pixel3"), m, "resnet34")
+    big = profile_soc_choice(CoreChoice((4,), "pixel3"), m, "resnet34")
+    assert little.power_w < big.power_w
+    assert little.energy_j > big.energy_j
+
+
+def test_O2_depthwise_scaling_inversion():
+    """ShuffleNet: 4 big cores slower than 1 big core (paper Fig. 2b)."""
+    m = E.SOC_MODELS["pixel3"]
+    one = profile_soc_choice(CoreChoice((4,), "pixel3"), m, "shufflenet-v2")
+    four = profile_soc_choice(CoreChoice((4, 5, 6, 7), "pixel3"), m, "shufflenet-v2")
+    assert one.latency_s < four.latency_s
+    one_r = profile_soc_choice(CoreChoice((4,), "pixel3"), m, "resnet34")
+    four_r = profile_soc_choice(CoreChoice((4, 5, 6, 7), "pixel3"), m, "resnet34")
+    assert four_r.latency_s < one_r.latency_s
+
+
+def test_O3_table2_speedups_in_band():
+    """Swan vs greedy baseline speedups land within the paper's Table 2 band."""
+    paper = {("shufflenet-v2", "s10e"): 39, ("shufflenet-v2", "oneplus8"): 17,
+             ("mobilenet-v2", "mi10"): 14, ("resnet34", "pixel3"): 1.0}
+    for (wl, dev), target in paper.items():
+        plan = explore_soc(dev, wl)
+        base = greedy_baseline_profile(E.SOC_MODELS[dev], wl)
+        sp = base.latency_s / plan.selected.latency_s
+        assert 0.7 * target <= sp <= 1.4 * target, \
+            f"{wl}/{dev}: {sp:.1f}x vs paper {target}x"
+
+
+def test_O4_controller_reduces_interference():
+    """Migration relinquishes contended cores (paper Table 3 direction)."""
+    import benchmarks.table3_interference as t3
+    base, swan, ctl = t3.score_impact("pixel3")
+    assert swan > base  # less negative impact
+    assert len(ctl.migrations) >= 1
+
+
+def test_O5_fl_macro_direction():
+    """Swan >= baseline on time-to-accuracy and energy at FL scale."""
+    from repro.fl.simulator import compare_policies
+    res = compare_policies("mobilenet-v2", rounds=50, n_clients=96,
+                           clients_per_round=16, seed=5)
+    assert res["swan"].total_energy_j < res["baseline"].total_energy_j
+    tgt = min(res["baseline"].final_accuracy, res["swan"].final_accuracy)
+    assert res["swan"].time_to_accuracy(tgt) <= res["baseline"].time_to_accuracy(tgt)
+
+
+def test_training_reduces_loss_end_to_end():
+    from repro.launch import train as T
+    losses = T.main(["--arch", "granite-3-2b", "--reduced", "--steps", "15",
+                     "--batch", "4", "--seq", "32", "--optimizer", "adam",
+                     "--lr", "1e-3", "--log-every", "100"])
+    assert losses[-1] < losses[0]
