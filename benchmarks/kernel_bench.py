@@ -1,0 +1,161 @@
+"""Attention-kernel benchmark: fwd and fwd+bwd across impls and paper shapes.
+
+Times ``attention_impl`` for every ``impl`` in {naive, chunked, pallas} at the
+head geometry of the assigned paper configs, both forward-only and through
+``jax.grad`` (the training hot path this PR makes first-class). Writes
+``BENCH_kernels.json`` so the perf trajectory is tracked per-PR, and prints
+the same ``name,us_per_call,derived`` CSV the rest of the harness uses.
+
+CI mode (default) runs reduced sequence lengths so the interpret-mode Pallas
+path finishes in seconds; ``--full`` uses the train_4k-scale sequences and is
+only meaningful on a real accelerator.
+
+Usage:
+  PYTHONPATH=src python benchmarks/kernel_bench.py [--full] [--out BENCH_kernels.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+IMPLS = ("naive", "chunked", "pallas")
+
+
+def _shapes(full: bool):
+    """(name, B, Sq, H, K, hd) derived from paper-config head geometry."""
+    from repro.configs import get_config
+    seq = 1024 if full else 128
+    batch = 2 if full else 1
+    out = []
+    for arch in ("llama3.2-1b", "granite-3-2b", "command-r-35b", "whisper-small"):
+        cfg = get_config(arch)
+        out.append((arch, batch, seq, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim))
+    return out
+
+
+def _time(fn, *args, iters: int, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def bench_attention(full: bool, iters: int):
+    from repro.models.attention import attention_impl
+    results = []
+    for name, B, S, H, K, hd in _shapes(full):
+        key = jax.random.PRNGKey(0)
+        q = jax.random.normal(key, (B, S, H, hd))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, K, hd))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, hd))
+        for impl in IMPLS:
+            chunk = min(1024, S)
+
+            @jax.jit
+            def fwd(q, k, v, impl=impl, chunk=chunk):
+                return attention_impl(q, k, v, causal=True, impl=impl, chunk=chunk)
+
+            @jax.jit
+            def fwdbwd(q, k, v, impl=impl, chunk=chunk):
+                def loss(q, k, v):
+                    return attention_impl(q, k, v, causal=True, impl=impl,
+                                          chunk=chunk).sum()
+                return jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+
+            rec = {"bench": "attention", "shape": name, "impl": impl,
+                   "B": B, "S": S, "H": H, "K": K, "hd": hd}
+            try:
+                rec["fwd_us"] = round(_time(fwd, q, k, v, iters=iters), 1)
+                rec["fwdbwd_us"] = round(_time(fwdbwd, q, k, v, iters=iters), 1)
+                rec["status"] = "ok"
+            except Exception as e:  # an impl that can't run here is recorded, not fatal
+                rec["status"] = f"error: {type(e).__name__}: {e}"
+            results.append(rec)
+    return results
+
+
+def bench_rmsnorm(full: bool, iters: int):
+    from repro.kernels import ops, ref
+    rows = 4096 if full else 512
+    d = 2048 if full else 512
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (rows, d))
+    s = jax.random.normal(jax.random.fold_in(key, 1), (d,))
+    results = []
+    for impl, fn in (("pallas", ops.rmsnorm), ("jnp", ref.ref_rmsnorm)):
+        fwd = jax.jit(fn)
+        fwdbwd = jax.jit(jax.grad(lambda x, s: fn(x, s).sum(), argnums=(0, 1)))
+        rec = {"bench": "rmsnorm", "shape": f"{rows}x{d}", "impl": impl}
+        try:
+            rec["fwd_us"] = round(_time(fwd, x, s, iters=iters), 1)
+            rec["fwdbwd_us"] = round(_time(fwdbwd, x, s, iters=iters), 1)
+            rec["status"] = "ok"
+        except Exception as e:
+            rec["status"] = f"error: {type(e).__name__}: {e}"
+        results.append(rec)
+    return results
+
+
+def run(fast: bool = True):
+    """Harness entry (benchmarks/run.py): yields (name, us, derived) rows.
+
+    Raises after yielding the good rows if any impl errored, so a broken
+    kernel path lands in the harness's failure accounting instead of
+    silently shrinking the row count.
+    """
+    bad = []
+    for rec in bench_attention(full=not fast, iters=2 if fast else 5):
+        if rec["status"] == "ok":
+            yield (f"kernel_attn_{rec['shape']}_{rec['impl']}_fwd",
+                   rec["fwd_us"], f"S={rec['S']}")
+            yield (f"kernel_attn_{rec['shape']}_{rec['impl']}_fwdbwd",
+                   rec["fwdbwd_us"], f"S={rec['S']}")
+        else:
+            bad.append(f"{rec['shape']}/{rec['impl']}: {rec['status']}")
+    if bad:
+        raise RuntimeError("kernel bench failures: " + "; ".join(bad))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="train-scale sequences (accelerator only)")
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    args = ap.parse_args()
+    iters = args.iters or (5 if args.full else 2)
+
+    results = bench_attention(args.full, iters) + bench_rmsnorm(args.full, iters)
+
+    print("name,us_per_call,derived")
+    for rec in results:
+        if rec["status"] != "ok":
+            print(f"{rec['bench']}_{rec['shape']}_{rec['impl']},0,{rec['status']}")
+            continue
+        for phase in ("fwd", "fwdbwd"):
+            print(f"{rec['bench']}_{rec['shape']}_{rec['impl']}_{phase},"
+                  f"{rec[f'{phase}_us']},")
+
+    payload = {"mode": "full" if args.full else "ci",
+               "backend": jax.default_backend(),
+               "iters": iters, "results": results}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {args.out} ({len(results)} records)", file=sys.stderr)
+    bad = [r for r in results if r["status"] != "ok"]
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

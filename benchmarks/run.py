@@ -1,11 +1,14 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV. ``--fast`` (default) uses reduced
-cohort sizes; ``--full`` runs the 2400-client FL simulation.
+Prints ``name,us_per_call,derived`` CSV and writes the same rows as
+machine-readable JSON (``BENCH_run.json`` by default) so per-PR perf
+trajectories can be diffed without parsing stdout. ``--fast`` (default) uses
+reduced cohort sizes; ``--full`` runs the 2400-client FL simulation.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -14,33 +17,47 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma-separated benchmark names (fig1b,fig2,table2,table3,table4)")
+                    help="comma-separated benchmark names "
+                         "(fig1b,fig2,table2,table3,table4,kernels)")
+    ap.add_argument("--json-out", default="BENCH_run.json",
+                    help="machine-readable results path ('' disables)")
     args = ap.parse_args()
 
-    from benchmarks import (figure1b_matmul, figure2_choices, table2_local,
-                            table3_interference, table4_fl)
+    from benchmarks import (figure1b_matmul, figure2_choices, kernel_bench,
+                            table2_local, table3_interference, table4_fl)
     benches = {
         "fig1b": figure1b_matmul.run,
         "fig2": figure2_choices.run,
         "table2": table2_local.run,
         "table3": table3_interference.run,
         "table4": lambda: table4_fl.run(fast=not args.full),
+        "kernels": lambda: kernel_bench.run(fast=not args.full),
     }
     if args.only:
         keep = set(args.only.split(","))
         benches = {k: v for k, v in benches.items() if k in keep}
 
     print("name,us_per_call,derived")
-    failed = 0
+    rows = []
+    failures = []
     for name, fn in benches.items():
         try:
             for row_name, us, derived in fn():
                 print(f"{row_name},{us:.1f},{derived}")
+                rows.append({"bench": name, "name": row_name,
+                             "us_per_call": round(float(us), 1),
+                             "derived": str(derived)})
         except Exception as e:
-            failed += 1
             traceback.print_exc()
             print(f"{name},0,FAILED:{type(e).__name__}:{e}")
-    if failed:
+            failures.append({"bench": name,
+                             "error": f"{type(e).__name__}: {e}"})
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"rows": rows, "failures": failures}, f, indent=1)
+        print(f"# wrote {args.json_out} ({len(rows)} rows, "
+              f"{len(failures)} failures)", file=sys.stderr)
+    if failures:
         sys.exit(1)
 
 

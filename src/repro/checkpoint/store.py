@@ -1,4 +1,4 @@
-"""Pytree (de)serialization: msgpack + zstd, atomic writes.
+"""Pytree (de)serialization: msgpack + zstd (zlib fallback), atomic writes.
 
 Arrays are stored as raw little-endian buffers with dtype/shape metadata;
 the tree structure is encoded as nested msgpack maps/lists. Restore is
@@ -6,16 +6,28 @@ mesh-agnostic: ``load_pytree`` returns numpy arrays which the caller
 device_puts under whatever sharding the *current* mesh dictates — this is
 what makes elastic re-meshing (Swan migration at cluster scale) a pure
 restore-time concern.
+
+``zstandard`` is an optional dependency: when absent we compress with zlib.
+The formats are self-describing (zstd frames start with the magic
+``28 B5 2F FD``), so either build can read checkpoints written by the other —
+except that reading a zstd checkpoint on a zlib-only install raises.
 """
 from __future__ import annotations
 
 import os
 import tempfile
+import zlib
 from typing import Any
 
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+except ImportError:  # optional dep: fall back to stdlib zlib
+    zstd = None
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
 
 _ARR = "__arr__"
 _TUPLE = "__tuple__"
@@ -61,7 +73,10 @@ def _decode(node):
 
 def save_pytree(tree: Any, path: str, *, level: int = 3) -> None:
     payload = msgpack.packb(_encode(tree), use_bin_type=True)
-    comp = zstd.ZstdCompressor(level=level).compress(payload)
+    if zstd is not None:
+        comp = zstd.ZstdCompressor(level=level).compress(payload)
+    else:
+        comp = zlib.compress(payload, level)
     d = os.path.dirname(os.path.abspath(path))
     os.makedirs(d, exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
@@ -77,5 +92,11 @@ def save_pytree(tree: Any, path: str, *, level: int = 3) -> None:
 def load_pytree(path: str) -> Any:
     with open(path, "rb") as f:
         comp = f.read()
-    payload = zstd.ZstdDecompressor().decompress(comp)
+    if comp[:4] == _ZSTD_MAGIC:
+        if zstd is None:
+            raise RuntimeError(
+                f"{path} is zstd-compressed but zstandard is not installed")
+        payload = zstd.ZstdDecompressor().decompress(comp)
+    else:
+        payload = zlib.decompress(comp)
     return _decode(msgpack.unpackb(payload, raw=False))

@@ -1,0 +1,92 @@
+"""Version-compat shims over JAX APIs that moved between releases.
+
+The repo targets the modern ``jax.sharding.get_abstract_mesh`` /
+``jax.set_mesh`` API (jax >= 0.5); on older installs (0.4.x) those names
+either don't exist or — in the case of the private
+``jax._src.mesh.get_abstract_mesh`` — return an axis-env tuple with entirely
+different semantics. Everything that needs "the mesh currently in scope"
+goes through this module so the rest of the codebase can pretend it runs on
+one JAX version.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+
+def get_abstract_mesh() -> Optional["jax.sharding.Mesh"]:
+    """The mesh in scope for tracing, or None when there isn't one.
+
+    On new JAX this is ``jax.sharding.get_abstract_mesh()`` (an AbstractMesh,
+    possibly empty). On 0.4.x we read ``thread_resources.env.physical_mesh``,
+    which both ``with mesh:`` and our :func:`set_mesh` fallback install.
+    Callers must handle both ``None`` and ``mesh.empty``.
+    """
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        return fn()
+    try:
+        from jax._src import mesh as _mesh_lib
+        env = _mesh_lib.thread_resources.env.physical_mesh
+        return None if env.empty else env
+    except Exception:
+        return None
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, axis_names=None):
+    """``jax.shard_map`` (new API) or ``jax.experimental.shard_map.shard_map``.
+
+    Translates the new-API kwargs to their 0.4.x spellings: ``check_vma`` was
+    ``check_rep``, and ``axis_names`` (the *manual* axes) is the complement of
+    the old ``auto`` set.
+    """
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        kwargs = {}
+        if check_vma is not None:
+            kwargs["check_vma"] = check_vma
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _sm
+    kwargs = {}
+    if check_vma is not None:
+        kwargs["check_rep"] = check_vma
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kwargs["auto"] = auto
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+def make_mesh(axis_shapes, axis_names, *, auto_axes: bool = True):
+    """``jax.make_mesh`` with Auto axis_types when the install supports them.
+
+    ``axis_types`` (and ``jax.sharding.AxisType``) only exist on new JAX;
+    0.4.x meshes are implicitly fully-auto, so dropping the argument is
+    semantics-preserving.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if auto_axes and axis_type is not None:
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=(axis_type.Auto,) * len(axis_shapes))
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """``jax.set_mesh(mesh)`` when available, else ``with mesh:``.
+
+    New JAX distinguishes entering a concrete mesh from installing the
+    abstract mesh that ``with_sharding_constraint`` resolves against; on
+    0.4.x ``with mesh:`` covers both roles.
+    """
+    fn = getattr(jax, "set_mesh", None)
+    if fn is not None:
+        with fn(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh

@@ -92,6 +92,7 @@ class MeshChoice:
     moe_cf: float = 1.25
     chunk: int = 1024  # attention KV chunk
     wide_ep: bool = False  # experts sharded over (model x data); tokens move
+    attn_impl: str = "chunked"  # attention kernel: chunked (jnp) | pallas
 
     @property
     def name(self) -> str:
@@ -103,6 +104,8 @@ class MeshChoice:
             tags.append("sp")
         if self.wide_ep:
             tags.append("wide-ep")
+        if self.attn_impl != "chunked":
+            tags.append(f"attn-{self.attn_impl}")
         return f"{mesh}[{','.join(tags)}]"
 
     @property
@@ -140,8 +143,14 @@ class MeshChoice:
 
 def enumerate_mesh_choices(total_chips: int = 256, *, multi_pod: bool = False,
                            microbatches=(1, 4, 16), remats=("none", "dots", "full"),
-                           max_tp: int = 64) -> List[MeshChoice]:
-    """The TPU execution-choice state space for one pod (or two)."""
+                           max_tp: int = 64,
+                           attn_impls=("chunked",)) -> List[MeshChoice]:
+    """The TPU execution-choice state space for one pod (or two).
+
+    ``attn_impls`` widens the space along the kernel dimension — pass
+    ``("chunked", "pallas")`` to let the planner trade the jnp online-softmax
+    fallback against the fused Pallas flash kernels per choice.
+    """
     out: List[MeshChoice] = []
     shapes = []
     chips = total_chips
@@ -152,12 +161,13 @@ def enumerate_mesh_choices(total_chips: int = 256, *, multi_pod: bool = False,
                 shapes.append((chips // tp, tp))
             tp *= 2
         chips //= 2
-    for (dp, tp), mb, rm in itertools.product(shapes, microbatches, remats):
+    for (dp, tp), mb, rm, ai in itertools.product(shapes, microbatches, remats,
+                                                  attn_impls):
         if multi_pod:
             out.append(MeshChoice((2, dp, tp), ("pod", "data", "model"),
-                                  microbatch=mb, remat=rm))
+                                  microbatch=mb, remat=rm, attn_impl=ai))
         else:
             out.append(MeshChoice((dp, tp), ("data", "model"),
-                                  microbatch=mb, remat=rm,
+                                  microbatch=mb, remat=rm, attn_impl=ai,
                                   prime_pod=(dp * tp == total_chips)))
     return out

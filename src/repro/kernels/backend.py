@@ -1,0 +1,41 @@
+"""Backend autodetection shared by every Pallas kernel wrapper (via ops.py).
+
+Mosaic only lowers on a real TPU backend; everywhere else (the CPU CI
+container, GPU hosts) the kernels run in Pallas interpret mode. Kernel entry
+points take ``interpret=None`` and resolve it here so no call site hardcodes
+a backend assumption.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def default_interpret() -> bool:
+    """True when the current backend cannot lower Mosaic (i.e. not a TPU)."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+def divisor_block(size: int, preferred: int) -> int:
+    """Largest block <= preferred that divides size (handles ragged dims)."""
+    b = min(preferred, size)
+    while size % b:
+        b -= 1
+    return b
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` (new JAX) / ``pltpu.TPUCompilerParams`` (0.4.x).
+
+    The class was renamed between releases; this must track repro.compat's
+    version span or the real-TPU (interpret=False) path dies on import of
+    whichever name the install lacks.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

@@ -16,10 +16,13 @@ Rows are pre-padded outside the kernel so all tap slices are static.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.backend import divisor_block, resolve_interpret
 
 
 def _dw_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, H: int, W: int):
@@ -44,14 +47,14 @@ def _dw_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, H: int, W: int):
 
 
 @functools.partial(jax.jit, static_argnames=("channel_block", "interpret"))
-def depthwise_conv(x, w, *, channel_block: int = 128, interpret: bool = True):
+def depthwise_conv(x, w, *, channel_block: int = 128,
+                   interpret: Optional[bool] = None):
     """x: (B,H,W,C); w: (kh,kw,C); stride 1, SAME padding, odd kernel dims."""
+    interpret = resolve_interpret(interpret)
     B, H, W, C = x.shape
     kh, kw = w.shape[0], w.shape[1]
     ph = (kh - 1) // 2
-    cb = min(channel_block, C)
-    while C % cb:
-        cb -= 1
+    cb = divisor_block(C, channel_block)
     xp = jnp.pad(x, ((0, 0), (ph, ph), (0, 0), (0, 0)))
     grid = (B, C // cb)
     return pl.pallas_call(

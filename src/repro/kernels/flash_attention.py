@@ -1,84 +1,385 @@
-"""Flash-attention forward Pallas kernel (prefill/train hot-spot).
+"""Flash-attention Pallas kernels: fused forward + custom_vjp backward.
 
-Grid: (batch, heads, q-blocks). Each invocation owns one (block_q, hd) query
-tile in VMEM and streams KV in (block_k, hd) tiles with the online-softmax
-recurrence entirely in registers/VMEM — the (Sq, Sk) score matrix never
-touches HBM. block_q/block_k default to 128 to match the MXU tile; hd rides
-the lane dim.
+This is the training-grade attention hot path (``impl="pallas"``). Three
+kernels share one tiling scheme:
 
-Heads are pre-broadcast by the wrapper (GQA handled in ops.py), keeping the
-kernel a pure MHA primitive.
+  forward   grid (B, H, q_blocks, kv_blocks)   -> o, lse
+  dq        grid (B, H, q_blocks, kv_blocks)   -> dq
+  dkv       grid (B, H, kv_blocks, q_blocks)   -> dk, dv
+
+Tiling / residual layout
+------------------------
+The innermost grid dimension iterates sequentially ("arbitrary" semantics on
+TPU), so the online-softmax state — running max ``m``, normalizer ``l`` and
+the output accumulator — lives in VMEM scratch that carries across KV tiles
+of one query block. KV streams through the grid via BlockSpec index maps in
+(block_k, hd) tiles: per grid step the kernel holds one (block_q, hd) query
+tile and one (block_k, hd) KV tile, and the (Sq, Sk) score matrix never
+exists anywhere — not in HBM, not in VMEM. The forward additionally emits the
+log-sum-exp rows ``lse = m + log(l)`` of shape (B, H, Sq); together with the
+saved output ``o`` this is the entire backward residual, O(B*H*Sq) instead of
+the O(Sq*Sk) probability matrix.
+
+Causal block skipping
+---------------------
+For causal attention, KV tiles entirely above the diagonal contribute
+nothing. Their grid steps are predicated out with ``pl.when`` AND their
+BlockSpec index maps clamp to the last needed tile, so the pipeline re-fetches
+a resident block instead of DMA-ing a dead one — the compute drops from
+Sq*Sk to the ~Sq*Sk/2 lower-triangular FLOPs (the paper-shape win at long
+Sq). The dkv kernel mirrors this by skipping query tiles entirely *below*
+its KV tile's diagonal band.
+
+Backward derivation (AttentionEngine-style online recomputation): with
+``p = exp(s - lse)`` and ``delta = rowsum(do * o)``,
+
+  dv = p^T @ do
+  ds = p * (do @ v^T - delta)
+  dq = scale * ds @ k          (accumulated over KV tiles)
+  dk = scale * ds^T @ q        (accumulated over Q tiles)
+
+``jax.custom_vjp`` wires these in so ``jax.grad`` through ``impl="pallas"``
+never differentiates the Pallas forward. Heads are pre-broadcast by the
+wrapper (GQA handled in ops.py, whose broadcast transpose sums dk/dv over the
+query-head group).
+
+Remaining (tracked in ROADMAP.md): dropout, sliding-window masking, a decode
+(single-query) kernel, and bf16 accumulation controls.
 """
 from __future__ import annotations
 
 import functools
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.backend import (divisor_block, resolve_interpret,
+                                   tpu_compiler_params)
 
 NEG_INF = -1e30
+_LANES = 128  # TPU lane width: m/l scratch rides (block_q, 128)
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, sk: int,
-                  causal: bool, q_offset: int, scale: float):
-    """q: (1,1,block_q,hd); k,v: (1,1,Sk,hd); o: (1,1,block_q,hd)."""
-    qi = pl.program_id(2)
-    q = q_ref[0, 0].astype(jnp.float32) * scale  # (bq, hd)
-    bq = q.shape[0]
-    hd = q.shape[1]
-    n_kv = sk // block_k
+def _causal_mask(s, qi, ji, bq, bk, q_offset):
+    q_idx = qi * bq + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) + q_offset
+    k_idx = ji * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    return k_idx <= q_idx
 
-    def body(j, carry):
-        m, l, acc = carry
-        k = jax.lax.dynamic_slice_in_dim(k_ref[0, 0], j * block_k, block_k, 0)
-        v = jax.lax.dynamic_slice_in_dim(v_ref[0, 0], j * block_k, block_k, 0)
-        s = q @ k.astype(jnp.float32).T  # (bq, bk)
+
+def _grid_params(interpret: bool):
+    """dimension_semantics: batch/head/outer-block parallel, inner sequential."""
+    if interpret:
+        return {}
+    return {"compiler_params": tpu_compiler_params(
+        dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"))}
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
+                block_q: int, block_k: int, causal: bool, q_offset: int,
+                scale: float, n_kv: int):
+    qi, ji = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ji == 0)
+    def _():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    if causal:
+        j_last = jnp.minimum(
+            (qi * block_q + block_q - 1 + q_offset) // block_k, n_kv - 1)
+        live = ji <= j_last
+    else:
+        live = ji >= 0  # always true; keeps one code path
+
+    @pl.when(live)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32) * scale
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
         if causal:
-            q_idx = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0) + q_offset
-            k_idx = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 1)
-            s = jnp.where(k_idx <= q_idx, s, NEG_INF)
-        m_blk = jnp.max(s, axis=-1)
-        m_new = jnp.maximum(m, m_blk)
-        p = jnp.exp(s - m_new[:, None])
-        corr = jnp.exp(m - m_new)
-        l_new = l * corr + p.sum(-1)
-        acc_new = acc * corr[:, None] + p @ v.astype(jnp.float32)
-        return m_new, l_new, acc_new
+            s = jnp.where(_causal_mask(s, qi, ji, block_q, block_k, q_offset),
+                          s, NEG_INF)
+        m_prev = m_scr[:, :1]
+        l_prev = l_scr[:, :1]
+        m_blk = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_blk)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
 
-    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
-    l0 = jnp.zeros((bq,), jnp.float32)
-    acc0 = jnp.zeros((bq, hd), jnp.float32)
-    m, l, acc = jax.lax.fori_loop(0, n_kv, body, (m0, l0, acc0))
-    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+    @pl.when(ji == n_kv - 1)
+    def _():
+        m = m_scr[:, :1]
+        l = jnp.maximum(l_scr[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+        lse_ref[0, 0] = (m + jnp.log(l))[:, 0]
+
+
+def _fwd_call(q, k, v, *, causal: bool, q_offset: int, bq: int, bk: int,
+              interpret: bool):
+    B, H, Sq, hd = q.shape
+    Sk = k.shape[2]
+    n_q, n_kv = Sq // bq, Sk // bk
+    scale = 1.0 / math.sqrt(hd)
+
+    def kv_index(b, h, i, j):
+        if causal:  # clamp dead above-diagonal tiles to the last live one
+            j = jnp.minimum(j, (i * bq + bq - 1 + q_offset) // bk)
+        return (b, h, j, 0)
+
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, block_q=bq, block_k=bk, causal=causal,
+                          q_offset=q_offset, scale=scale, n_kv=n_kv),
+        grid=(B, H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), kv_index),
+            pl.BlockSpec((1, 1, bk, hd), kv_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, i, j: (b, h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+            jax.ShapeDtypeStruct((B, H, Sq), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, _LANES), jnp.float32),
+            pltpu.VMEM((bq, _LANES), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+        **_grid_params(interpret),
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# backward: dq (stream KV per query block)
+# ---------------------------------------------------------------------------
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               dq_scr, *, block_q: int, block_k: int, causal: bool,
+               q_offset: int, scale: float, n_kv: int):
+    qi, ji = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ji == 0)
+    def _():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    if causal:
+        live = ji <= jnp.minimum(
+            (qi * block_q + block_q - 1 + q_offset) // block_k, n_kv - 1)
+    else:
+        live = ji >= 0
+
+    @pl.when(live)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0][:, None]
+        delta = delta_ref[0, 0][:, None]
+        s = scale * jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                        preferred_element_type=jnp.float32)
+        p = jnp.exp(s - lse)
+        if causal:
+            p = jnp.where(_causal_mask(s, qi, ji, block_q, block_k, q_offset),
+                          p, 0.0)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta)
+        dq_scr[...] += scale * jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ji == n_kv - 1)
+    def _():
+        dq_ref[0, 0] = dq_scr[...]
+
+
+# ---------------------------------------------------------------------------
+# backward: dk/dv (stream Q per KV block)
+# ---------------------------------------------------------------------------
+
+
+def _dkv_kernel(k_ref, v_ref, q_ref, do_ref, lse_ref, delta_ref, dk_ref,
+                dv_ref, dk_scr, dv_scr, *, block_q: int, block_k: int,
+                causal: bool, q_offset: int, scale: float, n_q: int):
+    ji, qi = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(qi == 0)
+    def _():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    # causal: query tiles whose last row is still above this KV tile's first
+    # column see none of it — skip them
+    live = ((qi + 1) * block_q - 1 + q_offset >= ji * block_k) if causal else qi >= 0
+
+    @pl.when(live)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0][:, None]
+        delta = delta_ref[0, 0][:, None]
+        s = scale * jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                        preferred_element_type=jnp.float32)
+        p = jnp.exp(s - lse)
+        if causal:
+            p = jnp.where(_causal_mask(s, qi, ji, block_q, block_k, q_offset),
+                          p, 0.0)
+        dv_scr[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta)
+        dk_scr[...] += scale * jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(qi == n_q - 1)
+    def _():
+        dk_ref[0, 0] = dk_scr[...]
+        dv_ref[0, 0] = dv_scr[...]
+
+
+def _bwd_call(q, k, v, o, lse, do, *, causal: bool, q_offset: int, bq: int,
+              bk: int, interpret: bool):
+    B, H, Sq, hd = q.shape
+    Sk = k.shape[2]
+    n_q, n_kv = Sq // bq, Sk // bk
+    scale = 1.0 / math.sqrt(hd)
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+
+    def kv_index(b, h, i, j):
+        if causal:
+            j = jnp.minimum(j, (i * bq + bq - 1 + q_offset) // bk)
+        return (b, h, j, 0)
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, block_q=bq, block_k=bk, causal=causal,
+                          q_offset=q_offset, scale=scale, n_kv=n_kv),
+        grid=(B, H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), kv_index),
+            pl.BlockSpec((1, 1, bk, hd), kv_index),
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, i, j: (b, h, i)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, i, j: (b, h, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bq, hd), jnp.float32)],
+        interpret=interpret,
+        **_grid_params(interpret),
+    )(q, k, v, do, lse, delta)
+
+    def q_index(b, h, j, i):
+        if causal:  # clamp dead below-band tiles to the first live one
+            i = jnp.maximum(i, (j * bk - q_offset) // bq)
+            i = jnp.clip(i, 0, n_q - 1)
+        return (b, h, i, 0)
+
+    def q_row_index(b, h, j, i):
+        bidx = q_index(b, h, j, i)
+        return (bidx[0], bidx[1], bidx[2])
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, block_q=bq, block_k=bk, causal=causal,
+                          q_offset=q_offset, scale=scale, n_q=n_q),
+        grid=(B, H, n_kv, n_q),
+        in_specs=[
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, j, i: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, j, i: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bq, hd), q_index),
+            pl.BlockSpec((1, 1, bq, hd), q_index),
+            pl.BlockSpec((1, 1, bq), q_row_index),
+            pl.BlockSpec((1, 1, bq), q_row_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, j, i: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, j, i: (b, h, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Sk, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, Sk, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bk, hd), jnp.float32),
+                        pltpu.VMEM((bk, hd), jnp.float32)],
+        interpret=interpret,
+        **_grid_params(interpret),
+    )(k, v, q, do, lse, delta)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wiring
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_mha(q, k, v, causal, q_offset, bq, bk, interpret):
+    o, _ = _fwd_call(q, k, v, causal=causal, q_offset=q_offset, bq=bq, bk=bk,
+                     interpret=interpret)
+    return o
+
+
+def _flash_mha_fwd(q, k, v, causal, q_offset, bq, bk, interpret):
+    o, lse = _fwd_call(q, k, v, causal=causal, q_offset=q_offset, bq=bq, bk=bk,
+                       interpret=interpret)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_mha_bwd(causal, q_offset, bq, bk, interpret, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = _bwd_call(q, k, v, o, lse, do, causal=causal,
+                           q_offset=q_offset, bq=bq, bk=bk, interpret=interpret)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_mha.defvjp(_flash_mha_fwd, _flash_mha_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "q_offset", "block_q",
                                              "block_k", "interpret"))
 def flash_attention_mha(q, k, v, *, causal: bool = True, q_offset: int = 0,
-                        block_q: int = 128, block_k: int = 128, interpret: bool = True):
-    """q,k,v: (B,H,S,hd) same head count. Returns (B,H,Sq,hd)."""
-    B, H, Sq, hd = q.shape
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: Optional[bool] = None):
+    """q,k,v: (B,H,S,hd) same head count. Returns (B,H,Sq,hd); differentiable."""
+    _, _, Sq, _ = q.shape
     Sk = k.shape[2]
-    bq = min(block_q, Sq)
-    while Sq % bq:
-        bq -= 1
-    bk = min(block_k, Sk)
-    while Sk % bk:
-        bk -= 1
-    scale = 1.0 / math.sqrt(hd)
-    grid = (B, H, Sq // bq)
-    return pl.pallas_call(
-        functools.partial(_flash_kernel, block_k=bk, sk=Sk, causal=causal,
-                          q_offset=q_offset, scale=scale),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, Sk, hd), lambda b, h, i: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, Sk, hd), lambda b, h, i: (b, h, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i: (b, h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
-        interpret=interpret,
-    )(q, k, v)
+    bq = divisor_block(Sq, block_q)
+    bk = divisor_block(Sk, block_k)
+    return _flash_mha(q, k, v, causal, q_offset, bq, bk,
+                      resolve_interpret(interpret))
+
+
+def flash_attention_fwd_lse(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                            block_q: int = 128, block_k: int = 128,
+                            interpret: Optional[bool] = None):
+    """Forward that also returns the (B,H,Sq) log-sum-exp residual rows."""
+    Sq, Sk = q.shape[2], k.shape[2]
+    return _fwd_call(q, k, v, causal=causal, q_offset=q_offset,
+                     bq=divisor_block(Sq, block_q),
+                     bk=divisor_block(Sk, block_k),
+                     interpret=resolve_interpret(interpret))

@@ -1,44 +1,53 @@
 """Jit'd dispatch wrappers for the Pallas kernels.
 
-On CPU (this container) kernels run in interpret mode; on a real TPU backend
-they lower via Mosaic (interpret=False). The model code calls these through
-``impl="pallas"`` switches; the default dry-run path uses the pure-jnp
-implementations so the 512-host-device AOT compile never lowers Mosaic ops.
+Backend selection is automatic (kernels/backend.py): on a real TPU the
+kernels lower via Mosaic; everywhere else they run in interpret mode. The
+model code calls these through ``impl="pallas"`` switches; the default
+dry-run path uses the pure-jnp implementations so the 512-host-device AOT
+compile never lowers Mosaic ops.
+
+All wrappers here are differentiable: flash_attention and rmsnorm carry
+``jax.custom_vjp`` backward kernels, so ``jax.grad`` through a pallas model
+never materializes an (Sq, Sk) tensor or an unfused norm backward.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import ref  # noqa: F401  (oracles re-exported for callers)
+from repro.kernels.backend import default_interpret as _interpret  # noqa: F401
 from repro.kernels.depthwise_conv import depthwise_conv as _dw
 from repro.kernels.flash_attention import flash_attention_mha
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
 def rmsnorm(x, scale, eps: float = 1e-5):
-    return _rmsnorm(x, scale, eps=eps, interpret=_interpret())
+    return _rmsnorm(x, scale, eps=eps)
 
 
 def depthwise_conv(x, w):
-    return _dw(x, w, interpret=_interpret())
+    return _dw(x, w)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0):
-    """q: (B,Sq,H,hd); k,v: (B,Sk,K,hd) with K dividing H (GQA broadcast)."""
+    """q: (B,Sq,H,hd); k,v: (B,Sk,K,hd) with K dividing H (GQA broadcast).
+
+    The head broadcast is a reshape of a broadcast_to — its transpose is a
+    sum over the query-head group axis, which is exactly how dk/dv for a
+    shared KV head accumulate over the G query heads that attended through
+    it. The MHA kernel itself never sees GQA.
+    """
     B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
     K = k.shape[2]
     if K != H:
-        rep = H // K
-        k = jnp.repeat(k, rep, axis=2)
-        v = jnp.repeat(v, rep, axis=2)
+        G = H // K
+        k = jnp.broadcast_to(k[:, :, :, None, :],
+                             (B, Sk, K, G, hd)).reshape(B, Sk, H, hd)
+        v = jnp.broadcast_to(v[:, :, :, None, :],
+                             (B, Sk, K, G, hd)).reshape(B, Sk, H, hd)
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
-    out = flash_attention_mha(qt, kt, vt, causal=causal, q_offset=q_offset,
-                              interpret=_interpret())
+    out = flash_attention_mha(qt, kt, vt, causal=causal, q_offset=q_offset)
     return out.transpose(0, 2, 1, 3)

@@ -74,13 +74,16 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
     rules = choice.rules()
-    model = build_model(cfg, impl="chunked", chunk=choice.chunk, remat=choice.remat,
-                        param_dtype=jnp.bfloat16, moe_cf=choice.moe_cf)
+    model = build_model(cfg, impl=choice.attn_impl, chunk=choice.chunk,
+                        remat=choice.remat, param_dtype=jnp.bfloat16,
+                        moe_cf=choice.moe_cf)
     params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
 
-    # jax.set_mesh (not `with mesh:`) — only set_mesh installs the abstract
-    # mesh that with_sharding_constraint/shard_map resolve during tracing.
-    with jax.set_mesh(mesh):
+    # set_mesh (not `with mesh:`) — on new JAX only set_mesh installs the
+    # abstract mesh that with_sharding_constraint/shard_map resolve during
+    # tracing; repro.compat falls back to `with mesh:` on 0.4.x.
+    from repro.compat import set_mesh
+    with set_mesh(mesh):
         with axis_rules(rules):
             p_shard = param_shardings(params_sds, mesh, rules)
             if shape.mode == "train":
@@ -198,6 +201,7 @@ def main():
     ap.add_argument("--remat", default=None)
     ap.add_argument("--compression", default=None)
     ap.add_argument("--chunk", type=int, default=None)
+    ap.add_argument("--attn-impl", default=None, choices=("chunked", "pallas"))
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -220,6 +224,8 @@ def main():
                     over["compression"] = args.compression
                 if args.chunk is not None:
                     over["chunk"] = args.chunk
+                if args.attn_impl is not None:
+                    over["attn_impl"] = args.attn_impl
                 if over:
                     choice = dataclasses.replace(choice, **over)
                 try:

@@ -27,7 +27,14 @@ HBM = 16 * 2 ** 30
 
 
 def profile_choice(arch, shape, choice):
-    rec = lower_cell(arch, shape, choice=choice, verbose=False)
+    # a choice that fails to lower (e.g. attn_impl=pallas on a backend whose
+    # AOT path can't take Mosaic/interpret callbacks) is *explored and
+    # rejected*, Swan-style — it must not kill the search
+    try:
+        rec = lower_cell(arch, shape, choice=choice, verbose=False)
+    except Exception as e:
+        rec = {"status": "error", "error": f"{type(e).__name__}: {e}",
+               "choice": choice.name}
     if rec["status"] != "ok":
         return None, rec
     prof = ChoiceProfile(
@@ -54,7 +61,7 @@ def main():
             over = {}
             for kv in spec.split(","):
                 k, v = kv.split("=")
-                k = {"mb": "microbatch"}.get(k, k)
+                k = {"mb": "microbatch", "attn": "attn_impl"}.get(k, k)
                 over[k] = int(v) if v.isdigit() else v
             candidates.append((spec, dataclasses.replace(base, **over)))
     else:
@@ -65,6 +72,10 @@ def main():
                     candidates.append(
                         (f"mb{mb},{remat}",
                          dataclasses.replace(base, microbatch=mb, remat=remat)))
+        # kernel dimension of the choice space: the fused Pallas flash
+        # attention vs the jnp chunked fallback, at the baseline (mb, remat)
+        candidates.append(("attn=pallas",
+                           dataclasses.replace(base, attn_impl="pallas")))
 
     log = []
     profiles = []

@@ -1,25 +1,20 @@
 """Production meshes. Importing this module never touches jax device state."""
 from __future__ import annotations
 
-import jax
-
-
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CI-scale dry-run tests (host device count permitting)."""
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+    return make_mesh(shape, axes)
 
 
 def make_choice_mesh(choice):
     """Mesh for an arbitrary MeshChoice (Swan exploration)."""
-    return jax.make_mesh(choice.mesh_shape, choice.axis_names,
-                         axis_types=_auto(len(choice.mesh_shape)))
+    return make_mesh(choice.mesh_shape, choice.axis_names)

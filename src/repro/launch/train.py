@@ -56,6 +56,10 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--optimizer", default="sgd", choices=["sgd", "adam"])
     ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--attn-impl", default="auto",
+                    choices=["auto", "naive", "chunked", "pallas"],
+                    help="attention kernel; auto = naive for short seq, "
+                         "chunked beyond 512")
     ap.add_argument("--compression", default="none")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
@@ -66,7 +70,10 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    model = build_model(cfg, impl="naive" if args.seq <= 512 else "chunked")
+    impl = args.attn_impl
+    if impl == "auto":
+        impl = "naive" if args.seq <= 512 else "chunked"
+    model = build_model(cfg, impl=impl)
     opt = sgd() if args.optimizer == "sgd" else adam()
     comp = Compressor(args.compression)
     step_fn = jax.jit(build_train_step(model, opt, microbatch=args.microbatch,

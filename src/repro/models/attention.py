@@ -4,8 +4,9 @@ Three implementations of the core softmax-attention compute:
   naive   - materialize (Sq, Sk) scores; smoke tests + oracle
   chunked - flash-style online softmax over KV chunks in pure jnp; the
             dry-run/default path (never materializes Sq x Sk)
-  pallas  - kernels/flash_attention.py (TPU Mosaic target; interpret-mode
-            validated on CPU)
+  pallas  - kernels/flash_attention.py fused fwd + custom_vjp flash backward
+            (training-grade; TPU Mosaic target, interpret-mode on CPU).
+            Selected per execution choice via MeshChoice.attn_impl.
 
 Decode shards the KV cache sequence dim over the ``kvseq`` logical axis
 (context-parallel decode): softmax over a sharded axis lowers to tiny

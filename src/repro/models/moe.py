@@ -8,7 +8,7 @@ collective a TP MLP would need anyway. No all-to-all. Over-capacity tokens are
 dropped per expert (Switch-style); capacity_factor configures the slack.
 
 Two execution paths:
-  - mesh path: jax.shard_map manual over (pod, data, ep) axes;
+  - mesh path: shard_map manual over (pod, data, ep) axes;
   - local path: identical math on one device (smoke tests / no mesh).
 """
 from __future__ import annotations
@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.models.common import activate, dense_init
 from repro.models.sharding import get_rules, resolve
 
@@ -105,7 +106,7 @@ def apply_moe(p, x, cfg, capacity_factor: float = 1.25, mesh=None,
     if isinstance(ep_axes, str):
         ep_axes = (ep_axes,)
     if mesh is None:
-        amesh = jax.sharding.get_abstract_mesh()
+        amesh = compat.get_abstract_mesh()
         mesh = None if (amesh is None or amesh.empty) else amesh
     ep_axes = tuple(a for a in (ep_axes or ()) if mesh is not None and a in mesh.axis_names)
 
@@ -215,7 +216,7 @@ def apply_moe(p, x, cfg, capacity_factor: float = 1.25, mesh=None,
         aux = jax.lax.pmean(aux, manual)
         return y.reshape(Bl, Sl, d).astype(x_loc.dtype), aux
 
-    y, aux = jax.shard_map(
+    y, aux = compat.shard_map(
         fn, mesh=mesh, in_specs=in_specs,
         out_specs=(x_spec, P()), check_vma=False,
         axis_names=set(manual))(*args)
@@ -291,7 +292,7 @@ def _apply_moe_wide_ep(p, x, cfg, mesh, rules, batch_axes, ep_axes, fsdp_axes,
         aux = jax.lax.pmean(aux, manual)
         return y.reshape(Bl, Sl, d).astype(x_loc.dtype), aux
 
-    y, aux = jax.shard_map(
+    y, aux = compat.shard_map(
         fn, mesh=mesh, in_specs=in_specs,
         out_specs=(x_spec, P()), check_vma=False,
         axis_names=set(manual))(*args)

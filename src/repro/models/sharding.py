@@ -23,6 +23,8 @@ from typing import Optional, Sequence, Tuple, Union
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import get_abstract_mesh
+
 AxisBinding = Union[None, str, Tuple[str, ...]]
 
 # Default rule set: single-pod (data, model) mesh, FSDP+TP.
@@ -87,7 +89,7 @@ def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
 
     No-op outside a mesh context so model code runs unmodified on a bare CPU.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or mesh.empty:
         return x
     spec = resolve(*logical)

@@ -31,8 +31,8 @@ from repro.optim.optimizers import sgd
 arch = %r
 cfg = REGISTRY[arch].reduced()
 choice = MeshChoice((2, 2, 2), ("pod", "data", "model"), microbatch=2, remat="dots")
-mesh = jax.make_mesh(choice.mesh_shape, choice.axis_names,
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+from repro.compat import make_mesh, set_mesh
+mesh = make_mesh(choice.mesh_shape, choice.axis_names)
 rules = choice.rules()
 model = build_model(cfg, impl="chunked", chunk=8, remat=choice.remat)
 params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
@@ -45,7 +45,7 @@ class Shape:
     global_batch, seq_len, mode = 8, 16, "train"
     name = "tiny"
 
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     with axis_rules(rules):
         p_shard = param_shardings(params_sds, mesh, rules)
         state_shard = {"params": p_shard, "opt": (), "err": (), "step": replicated(mesh)}
