@@ -26,17 +26,31 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--ckpt-dir", default="/tmp/swan_lm_ckpt")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="train on the engine's Rung ladder and migrate "
+                         "under (synthetic) co-tenant pressure")
+    ap.add_argument("--interference-trace", default=None,
+                    help="e.g. '100:160:3.0' — requires --adaptive to react")
     args = ap.parse_args()
 
     print(f"params: {CONFIG_100M.param_count() / 1e6:.1f}M")
     C.REGISTRY[CONFIG_100M.name] = CONFIG_100M
-    losses = T.main([
+    argv = [
         "--arch", CONFIG_100M.name, "--steps", str(args.steps),
         "--batch", str(args.batch), "--seq", str(args.seq),
         "--optimizer", "adam", "--lr", "3e-4",
         "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100", "--resume",
         "--log-every", "25",
-    ])
+    ]
+    if args.adaptive:
+        argv += ["--adaptive"]
+    if args.interference_trace:
+        argv += ["--interference-trace", args.interference_trace]
+    losses = T.main(argv)
+    if not losses:
+        print("nothing to do (checkpoint already at --steps); "
+              "bump --steps to continue training")
+        return
     assert losses[-1] < losses[0], "loss did not decrease"
     print("OK: loss decreased", losses[0], "->", losses[-1])
 

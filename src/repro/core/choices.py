@@ -127,6 +127,14 @@ class MeshChoice:
         # (TP holds ICI links hostage; relinquishing them helps co-tenants).
         return (int(self.prime_pod), self.n_chips, self.tp_degree)
 
+    def rung_fields(self) -> dict:
+        """The executable subset of this choice — what engine.rungs.Rung can
+        switch live (mesh-shape switches cost a checkpoint round-trip; the
+        rest migrate in place)."""
+        return {"microbatch": self.microbatch, "attn_impl": self.attn_impl,
+                "mesh_shape": self.mesh_shape, "chunk": self.chunk,
+                "remat": self.remat, "compression": self.compression}
+
     def rules(self) -> dict:
         """Logical-axis rule set for models/sharding.py."""
         has_pod = "pod" in self.axis_names

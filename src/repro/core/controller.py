@@ -70,3 +70,10 @@ class SwanController:
         if self.idx + 1 < len(self.ladder):
             self._migrate(self.idx + 1, reason)
         return self.active
+
+    def calibrate(self, latency_s: float) -> None:
+        """Install a *measured* clean-step latency as the active choice's
+        expectation. Live engines (engine/session.py) measure real step
+        times; ladder profiles only seed the estimate, so the first clean
+        steps on each rung re-anchor the monitor here."""
+        self.monitor.rebase(latency_s)

@@ -74,6 +74,20 @@ def pick_fastest(profiles: Sequence[ChoiceProfile],
     return total_order(feasible)[0]
 
 
+def ladder_sensitivities(n: int, *, head: float = 1.0, floor: float = 0.1,
+                         decay: float = 0.4) -> List[float]:
+    """Interference sensitivity by ladder position (fastest first).
+
+    The pruning invariant (each survivor relinquishes resources the faster
+    ones hold) means each downgrade overlaps less with a co-tenant's demand;
+    model that as geometric decay toward a floor. engine/rungs.py uses this to
+    turn a ChoiceProfile ladder into Rungs whose simulated interference
+    shrinks as the engine steps down — the mechanism behind Table 3's
+    foreground-impact recovery.
+    """
+    return [max(floor, head * decay ** i) for i in range(max(n, 1))]
+
+
 def pick_most_efficient(profiles: Sequence[ChoiceProfile],
                         *, memory_limit: Optional[int] = None) -> ChoiceProfile:
     feasible = [p for p in profiles

@@ -34,6 +34,12 @@ class SwanPlan:
     def controller(self, **kw) -> SwanController:
         return SwanController(self.ladder, **kw)
 
+    def rung_ladder(self, **overrides):
+        """The pruned ladder as executable engine Rungs (MeshChoice-backed
+        plans only — SoC CoreChoices have no jittable step)."""
+        from repro.engine.rungs import rungs_from_ladder
+        return rungs_from_ladder(self.ladder, **overrides)
+
     @property
     def explored_names(self) -> List[str]:
         return [p.name for p in self.profiles]

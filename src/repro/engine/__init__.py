@@ -1,0 +1,15 @@
+"""Adaptive training runtime (paper Fig. 4b as a live engine).
+
+``rungs``    — executable ladder entries (Rung) with cached jitted steps.
+``events``   — interference traces + device-loss event sources.
+``timeline`` — machine-readable migration/step history.
+``session``  — TrainSession: the event loop that migrates between Rungs
+               mid-training without restarting.
+"""
+from repro.engine.events import (Burst, DeviceLossEvent, FaultModelEvents,  # noqa: F401
+                                 InterferenceTrace, ScriptedFaults)
+from repro.engine.rungs import (Rung, default_rung_ladder,  # noqa: F401
+                                rungs_from_ladder)
+from repro.engine.session import SessionResult, TrainSession  # noqa: F401
+from repro.engine.timeline import (MigrationRecord, StepRecord,  # noqa: F401
+                                   Timeline)

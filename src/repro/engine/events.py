@@ -1,0 +1,98 @@
+"""Event sources the TrainSession reacts to.
+
+Two kinds, matching the paper's two migration triggers:
+
+- InterferenceTrace: synthetic co-tenant bursts (the ``--interference-trace``
+  CLI flag). A burst multiplies the *observed* step latency the controller
+  sees; how much of it a rung actually feels is scaled by that rung's
+  ``interference_sensitivity`` — downgrading relinquishes the contended
+  resource, so cheap rungs see a smaller multiplier (paper Fig. 4b / Table 3).
+- Device-loss events (FaultModel-sampled or scripted): hard interference that
+  routes through SwanController.force_downgrade and forces a remesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.runtime.fault import FaultModel
+
+
+@dataclasses.dataclass(frozen=True)
+class Burst:
+    start: int  # first slowed step (inclusive)
+    stop: int  # first clean step again (exclusive)
+    slowdown: float  # latency multiplier at full sensitivity
+
+    def active(self, step: int) -> bool:
+        return self.start <= step < self.stop
+
+
+@dataclasses.dataclass(frozen=True)
+class InterferenceTrace:
+    bursts: Tuple[Burst, ...] = ()
+
+    @classmethod
+    def parse(cls, spec: str) -> "InterferenceTrace":
+        """Parse ``"start:stop:slowdown[,start:stop:slowdown...]"``,
+        e.g. ``"40:80:2.5,120:140:3"``."""
+        bursts = []
+        for part in spec.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            fields = part.split(":")
+            if len(fields) != 3:
+                raise ValueError(f"bad burst {part!r}; want start:stop:slowdown")
+            start, stop, slow = int(fields[0]), int(fields[1]), float(fields[2])
+            if stop <= start or slow < 1.0:
+                raise ValueError(f"bad burst {part!r}: need stop>start, slowdown>=1")
+            bursts.append(Burst(start, stop, slow))
+        return cls(tuple(sorted(bursts, key=lambda b: b.start)))
+
+    def slowdown(self, step: int) -> float:
+        """Full-sensitivity multiplier at ``step`` (max over active bursts)."""
+        active = [b.slowdown for b in self.bursts if b.active(step)]
+        return max(active) if active else 1.0
+
+    def effective_slowdown(self, step: int, sensitivity: float) -> float:
+        """Multiplier actually felt by a rung with the given sensitivity."""
+        return 1.0 + (self.slowdown(step) - 1.0) * sensitivity
+
+    def active(self, step: int) -> bool:
+        return self.slowdown(step) > 1.0
+
+    def to_json(self) -> List[dict]:
+        return [dataclasses.asdict(b) for b in self.bursts]
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceLossEvent:
+    step: int
+    device_ids: Tuple[int, ...]
+
+
+class ScriptedFaults:
+    """Deterministic device-loss schedule: {step: (device ids to fail)}."""
+
+    def __init__(self, schedule: Dict[int, Sequence[int]]):
+        self.schedule = {int(k): tuple(v) for k, v in schedule.items()}
+
+    def __call__(self, step: int, healthy_ids: Sequence[int]
+                 ) -> Tuple[int, ...]:
+        ids = self.schedule.get(step, ())
+        return tuple(i for i in ids if i in set(healthy_ids))
+
+
+class FaultModelEvents:
+    """Adapter from runtime.fault.FaultModel's per-step sampling to the
+    session's event callback."""
+
+    def __init__(self, fault_model: FaultModel):
+        self.fault_model = fault_model
+
+    def __call__(self, step: int, healthy_ids: Sequence[int]
+                 ) -> Tuple[int, ...]:
+        healthy_ids = list(healthy_ids)
+        mask = self.fault_model.step_failures(len(healthy_ids))
+        return tuple(i for i, dead in zip(healthy_ids, mask) if dead)

@@ -1,0 +1,329 @@
+"""TrainSession: the live migration loop (paper Fig. 4b, runnable).
+
+The session owns the training state and an event loop that, per step:
+
+1. applies device-loss events (ElasticController.mark_failed +
+   SwanController.force_downgrade + mandatory remesh),
+2. executes the active Rung's cached jitted step,
+3. feeds the observed latency to SwanController, and
+4. applies any migration decision *without restarting*:
+   - same-mesh migrations (microbatch / kernel / dtype) carry state over in
+     place, casting parameters with launch.steps.cast_params when the dtype
+     changes;
+   - mesh-shape migrations go through one CheckpointManager save/restore
+     round-trip against ElasticController.make_mesh, re-sharding parameters
+     under the surviving mesh.
+
+Latency semantics: the wall time of each step is measured; a synthetic
+InterferenceTrace (the ``--interference-trace`` flag) multiplies what the
+*monitor observes* by the burst's slowdown scaled by the active rung's
+interference sensitivity — i.e. downgrading genuinely shrinks the simulated
+contention, exactly the relinquish-and-recover dynamic of the paper. A
+``latency_fn`` override replaces the observation entirely (deterministic
+tests / benchmarks); real compute still runs either way.
+"""
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+import time
+from typing import Any, Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager, shard_restore
+from repro.compat import set_mesh
+from repro.core.controller import SwanController
+from repro.engine.events import InterferenceTrace
+from repro.engine.rungs import Rung
+from repro.engine.timeline import Timeline
+from repro.launch.steps import cast_params, init_train_state
+from repro.runtime.elastic import ElasticController
+
+
+@dataclasses.dataclass
+class SessionResult:
+    losses: List[float]
+    timeline: Timeline
+    state: Any
+    final_rung: str
+    controller: Optional[SwanController] = None
+
+
+class TrainSession:
+    def __init__(self, cfg, rungs: Sequence[Rung], *, optimizer, batch_fn,
+                 lr: float = 0.05, compressor=None,
+                 ckpt: Optional[CheckpointManager] = None, ckpt_every: int = 0,
+                 elastic: Optional[ElasticController] = None,
+                 fault_events: Optional[Callable] = None,
+                 trace: Optional[InterferenceTrace] = None,
+                 adaptive: bool = True, upgrade_patience: int = 5,
+                 latency_fn: Optional[Callable] = None,
+                 log_every: int = 0, verbose: bool = True):
+        if not rungs:
+            raise ValueError("need at least one rung")
+        if latency_fn is not None and any(
+                r.latency_estimate_s is None for r in rungs):
+            raise ValueError("latency_fn mode needs latency_estimate_s on "
+                             "every rung (observations are compared to them)")
+        self.cfg = cfg
+        self.rungs = list(rungs)
+        self.optimizer = optimizer
+        self.batch_fn = batch_fn
+        self.lr = lr
+        self.compressor = compressor
+        self.ckpt = ckpt
+        self.ckpt_every = ckpt_every
+        self.elastic = elastic
+        self.fault_events = fault_events
+        self.trace = trace
+        self.adaptive = adaptive and len(self.rungs) > 1
+        self.latency_fn = latency_fn
+        self.log_every = log_every
+        self.verbose = verbose
+
+        n = len(self.rungs)
+        profiles = [r.profile(position=i, n=n) for i, r in enumerate(self.rungs)]
+        self.ctl = SwanController(profiles, upgrade_patience=upgrade_patience)
+        self.timeline = Timeline()
+        self._expected: dict = {}  # rung name -> calibrated clean latency
+        if latency_fn is not None:
+            for r in self.rungs:
+                self._expected[r.name] = r.latency_estimate_s
+        self._steps_on_rung = 0
+        self._mesh = None
+        self._mesh_key = None
+        self._migrate_ckpt: Optional[CheckpointManager] = None
+        self._migrate_tmpdir = None
+
+    # -- rung / mesh plumbing ----------------------------------------------
+    @property
+    def rung(self) -> Rung:
+        return self.rungs[self.ctl.idx]
+
+    def _mesh_for(self, rung: Rung):
+        if self.elastic is not None:
+            shape = None
+            if rung.mesh_shape is not None and \
+                    int(np.prod(rung.mesh_shape)) <= self.elastic.n_healthy:
+                shape = rung.mesh_shape
+            return self.elastic.make_mesh(shape=shape)
+        if rung.mesh_shape is not None:
+            from repro.compat import make_mesh
+            names = ("pod", "data", "model")[-len(rung.mesh_shape):]
+            return make_mesh(rung.mesh_shape, names)
+        return None
+
+    @staticmethod
+    def _mesh_fingerprint(mesh):
+        if mesh is None:
+            return None
+        return (tuple(mesh.devices.shape),
+                tuple(d.id for d in mesh.devices.flat))
+
+    def _run_step(self, state, batch):
+        fn = self.rung.jitted_step(self.cfg, self.optimizer, lr=self.lr,
+                                   compressor=self.compressor)
+        if self._mesh is not None:
+            with set_mesh(self._mesh):
+                return fn(state, batch)
+        return fn(state, batch)
+
+    # -- migrations --------------------------------------------------------
+    def _ckpt(self) -> CheckpointManager:
+        """Manager for migration round-trips: the user's, or a private
+        tempdir one (kept separate so an unconfigured session doesn't start
+        periodic-checkpointing into a directory nobody reads)."""
+        if self.ckpt is not None:
+            return self.ckpt
+        if self._migrate_ckpt is None:
+            # TemporaryDirectory cleans itself up when the session is
+            # collected, so migration round-trips don't leak checkpoints
+            self._migrate_tmpdir = tempfile.TemporaryDirectory(
+                prefix="swan_migrate_")
+            self._migrate_ckpt = CheckpointManager(self._migrate_tmpdir.name)
+        return self._migrate_ckpt
+
+    def _remesh(self, completed: int, state, new_mesh):
+        """One checkpoint round-trip: gather to host under the old mesh,
+        re-shard under the new one. ``completed`` is the number of finished
+        optimizer steps — a crash-resume from this checkpoint must not skip
+        work. Also drops every cached executable — the device set changed
+        under them."""
+        mgr = self._ckpt()
+        mgr.save(completed, state)
+        # restore exactly the checkpoint just written — restore_latest could
+        # pick up a stale higher-step file in a reused checkpoint directory
+        if new_mesh is not None:
+            _, state = mgr.restore(completed, mesh=new_mesh)
+        else:
+            _, state = mgr.restore(completed)
+            state = jax.tree_util.tree_map(
+                lambda a: jnp.asarray(a) if hasattr(a, "dtype") else a, state)
+        for r in self.rungs:
+            r.invalidate()
+        self._mesh = new_mesh
+        self._mesh_key = self._mesh_fingerprint(new_mesh)
+        return state
+
+    def _apply_migration(self, step: int, state, from_rung: Rung,
+                         reason: str, completed: int):
+        """Carry state from ``from_rung`` onto the (already switched)
+        controller's active rung. ``completed`` = optimizer steps finished so
+        far (== step before the step runs, step + 1 after). Returns
+        (state, MigrationRecord)."""
+        to_rung = self.rung
+        t0 = time.perf_counter()
+        new_mesh = self._mesh_for(to_rung)
+        kind = "in-place"
+        if self._mesh_fingerprint(new_mesh) != self._mesh_key:
+            kind = "remesh"
+            state = self._remesh(completed, state, new_mesh)
+        if to_rung.param_dtype != from_rung.param_dtype:
+            # cast only the parameters: optimizer moments stay float32 (adam
+            # keeps full-precision state under bf16 params; recasting them
+            # would change the step's input avals and force a recompile)
+            state = dict(state)
+            state["params"] = cast_params(state["params"], to_rung.dtype)
+        cost_s = time.perf_counter() - t0
+        expected = self._expected.get(to_rung.name)
+        # re-anchor the monitor: prefer the rung's own calibration, else
+        # scale the departing rung's by the ladder's relative latencies
+        if expected is None:
+            base = self._expected.get(from_rung.name)
+            if base is not None and from_rung.rel_latency > 0:
+                expected = base * (to_rung.rel_latency / from_rung.rel_latency)
+        if expected is not None:
+            self.ctl.calibrate(expected)
+        cost_steps = 0
+        if kind == "remesh":
+            cost_steps = max(1, int(round(cost_s / expected))) \
+                if expected else 1
+        rec = self.timeline.record_migration(
+            step=step, from_rung=from_rung.name, to_rung=to_rung.name,
+            reason=reason, kind=kind, cost_s=round(cost_s, 6),
+            cost_steps=cost_steps)
+        self._steps_on_rung = 0
+        if self.verbose:
+            print(f"[swan] step {step}: migrate {from_rung.name} -> "
+                  f"{to_rung.name} ({reason}, {kind})")
+        return state, rec
+
+    def _sync_rung(self, step: int, state, prev_idx: int, completed: int):
+        if self.ctl.idx == prev_idx:
+            return state
+        state, _ = self._apply_migration(
+            step, state, self.rungs[prev_idx],
+            self.ctl.migrations[-1].reason, completed)
+        return state
+
+    # -- event loop --------------------------------------------------------
+    def run(self, steps: int, *, start: int = 0, state=None,
+            rng_seed: int = 0) -> SessionResult:
+        self._mesh = self._mesh_for(self.rung)
+        self._mesh_key = self._mesh_fingerprint(self._mesh)
+        if state is None:
+            model = self.rung.build_model(self.cfg)
+            state = init_train_state(model, self.optimizer,
+                                     jax.random.PRNGKey(rng_seed),
+                                     compressor=self.compressor)
+        else:
+            # a resumed checkpoint may have been written on any rung (e.g.
+            # the bf16 bottom); the session starts on the controller's
+            # active rung, so align the parameter dtype here
+            state = dict(state)
+            state["params"] = cast_params(state["params"], self.rung.dtype)
+        if self._mesh is not None:
+            host = jax.tree_util.tree_map(
+                lambda a: jax.device_get(a) if hasattr(a, "dtype") else a, state)
+            state = shard_restore(host, self._mesh)
+        else:
+            state = jax.tree_util.tree_map(
+                lambda a: jnp.asarray(a) if hasattr(a, "dtype") else a, state)
+
+        losses: List[float] = []
+        for step in range(start, steps):
+            # 1. hard events: device loss forces a downgrade + remesh
+            if self.fault_events is not None and self.elastic is not None:
+                failed = tuple(self.fault_events(step, self.elastic.healthy_ids()))
+                if failed:
+                    self.elastic.mark_failed(failed)
+                    prev = self.ctl.idx
+                    self.ctl.force_downgrade("device-loss")
+                    if self.ctl.idx != prev:
+                        # the step hasn't run yet: only `step` steps finished
+                        state = self._sync_rung(step, state, prev,
+                                                completed=step)
+                    new_mesh = self._mesh_for(self.rung)
+                    if self._mesh_fingerprint(new_mesh) != self._mesh_key:
+                        # no rung change (ladder bottom) but a lost device
+                        # may hold shards: remesh is still mandatory
+                        t0 = time.perf_counter()
+                        state = self._remesh(step, state, new_mesh)
+                        self.timeline.record_migration(
+                            step=step, from_rung=self.rung.name,
+                            to_rung=self.rung.name, reason="device-loss",
+                            kind="remesh",
+                            cost_s=round(time.perf_counter() - t0, 6),
+                            cost_steps=1)
+                        self._steps_on_rung = 0
+
+            # 2. execute one step on the active rung
+            rung = self.rung
+            t0 = time.perf_counter()
+            state, metrics = self._run_step(state, self.batch_fn(step))
+            loss = float(metrics["loss"])  # blocks until the step is done
+            dt = time.perf_counter() - t0
+            warmup = self._steps_on_rung == 0
+            self._steps_on_rung += 1
+
+            # 3. what the monitor sees
+            if self.latency_fn is not None:
+                observed = float(self.latency_fn(step, rung, dt))
+            elif self.trace is not None:
+                observed = dt * self.trace.effective_slowdown(
+                    step, rung.interference_sensitivity)
+            else:
+                observed = dt
+            losses.append(loss)
+            self.timeline.record_step(step=step, rung=rung.name,
+                                      latency_s=round(dt, 6),
+                                      observed_s=round(observed, 6),
+                                      loss=loss, warmup=warmup)
+
+            # 4. adapt
+            if self.adaptive:
+                feed = True
+                if self.latency_fn is None:
+                    if warmup:
+                        feed = False  # first step on a rung pays compile
+                    elif rung.name not in self._expected:
+                        # calibrate this rung's clean latency from the wall
+                        # measurement. Synthetic traces never slow the actual
+                        # machine, so dt is clean even mid-burst; under real
+                        # interference (no trace) a rung first visited while
+                        # pressured calibrates high, which only delays
+                        # detection until the post-clear upgrade re-visits it
+                        self._expected[rung.name] = dt
+                        self.ctl.calibrate(dt)
+                if feed:
+                    prev = self.ctl.idx
+                    self.ctl.observe_step(observed)
+                    state = self._sync_rung(step, state, prev,
+                                            completed=step + 1)
+
+            if self.log_every and (step % self.log_every == 0
+                                   or step == steps - 1):
+                print(f"step {step:5d} loss {loss:8.4f} ({dt * 1e3:.0f} ms) "
+                      f"[{rung.name}]")
+            if self.ckpt is not None and self.ckpt_every and \
+                    (step + 1) % self.ckpt_every == 0:
+                self.ckpt.save(step + 1, state)
+
+        if self.ckpt is not None and losses:
+            self.ckpt.save(steps, state)
+        return SessionResult(losses=losses, timeline=self.timeline,
+                             state=state, final_rung=self.rung.name,
+                             controller=self.ctl)

@@ -1,0 +1,98 @@
+"""Machine-readable history of an adaptive training run.
+
+Every migration is recorded as (step, from/to rung, reason, kind, cost), and
+every step as (rung, wall latency, observed latency, loss). The benchmark
+harness (benchmarks/table3_interference.py) consumes this to plot adaptive vs
+static step-time curves, and tests assert on it instead of scraping stdout.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class MigrationRecord:
+    step: int
+    from_rung: str
+    to_rung: str
+    reason: str  # "interference" | "clear" | "device-loss" | ...
+    kind: str  # "in-place" (state carried over) | "remesh" (ckpt round-trip)
+    cost_s: float = 0.0
+    cost_steps: int = 0  # migration stall expressed in expected step times
+
+
+@dataclasses.dataclass
+class StepRecord:
+    step: int
+    rung: str
+    latency_s: float  # wall time of the step
+    observed_s: float  # latency fed to the interference monitor
+    loss: float
+    warmup: bool = False  # first step on a rung (includes compile)
+
+
+class Timeline:
+    def __init__(self):
+        self.migrations: List[MigrationRecord] = []
+        self.steps: List[StepRecord] = []
+
+    def record_migration(self, **kw) -> MigrationRecord:
+        rec = MigrationRecord(**kw)
+        self.migrations.append(rec)
+        return rec
+
+    def record_step(self, **kw) -> StepRecord:
+        rec = StepRecord(**kw)
+        self.steps.append(rec)
+        return rec
+
+    # -- views -------------------------------------------------------------
+    def step_times(self, *, observed: bool = False) -> List[float]:
+        return [s.observed_s if observed else s.latency_s for s in self.steps]
+
+    def rung_at(self, step: int) -> Optional[str]:
+        for s in self.steps:
+            if s.step == step:
+                return s.rung
+        return None
+
+    def summary(self) -> dict:
+        # a device-loss remesh at the ladder bottom records from == to;
+        # that is a migration but not a rung downgrade
+        downs = sum(1 for m in self.migrations
+                    if m.reason != "clear" and m.from_rung != m.to_rung)
+        ups = sum(1 for m in self.migrations if m.reason == "clear")
+        steady = [s.latency_s for s in self.steps if not s.warmup]
+        return {
+            "n_steps": len(self.steps),
+            "n_migrations": len(self.migrations),
+            "downgrades": downs,
+            "upgrades": ups,
+            "remesh_migrations": sum(1 for m in self.migrations
+                                     if m.kind == "remesh"),
+            "migration_cost_s": round(sum(m.cost_s for m in self.migrations), 6),
+            "migration_cost_steps": sum(m.cost_steps for m in self.migrations),
+            "mean_step_s": (sum(steady) / len(steady)) if steady else 0.0,
+        }
+
+    # -- serialization -----------------------------------------------------
+    def to_json(self) -> dict:
+        return {"migrations": [dataclasses.asdict(m) for m in self.migrations],
+                "steps": [dataclasses.asdict(s) for s in self.steps],
+                "summary": self.summary()}
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1)
+        return path
+
+    @classmethod
+    def from_json(cls, payload: dict) -> "Timeline":
+        tl = cls()
+        for m in payload.get("migrations", ()):
+            tl.record_migration(**m)
+        for s in payload.get("steps", ()):
+            tl.record_step(**s)
+        return tl

@@ -21,6 +21,24 @@ def resolve_interpret(interpret: Optional[bool]) -> bool:
     return default_interpret() if interpret is None else bool(interpret)
 
 
+def auto_attn_impl(seq_len: int, *, interpret: Optional[bool] = None) -> str:
+    """Attention-kernel policy for ``--attn-impl auto``.
+
+    Policy table (seq length x backend capability):
+      - short sequences: ``naive`` — exact, no tiling overhead, and the O(S^2)
+        score matrix is small enough to materialize;
+      - long sequences on a backend that can lower Mosaic (real TPU,
+        ``interpret`` False): ``pallas`` — the training-fit flash kernel with
+        the custom_vjp backward;
+      - long sequences everywhere else (CPU/GPU, interpret mode): ``chunked``
+        — the jnp online-softmax fallback; interpreted Pallas would be
+        orders of magnitude slower than the same math in jnp.
+    """
+    if seq_len <= 512:
+        return "naive"
+    return "chunked" if resolve_interpret(interpret) else "pallas"
+
+
 def divisor_block(size: int, preferred: int) -> int:
     """Largest block <= preferred that divides size (handles ragged dims)."""
     b = min(preferred, size)

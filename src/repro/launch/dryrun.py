@@ -24,10 +24,11 @@ from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.configs import ASSIGNED, SHAPES, applicable, get_config
 from repro.core.choices import MeshChoice
 from repro.core.profiler import roofline_from_compiled
+from repro.engine.rungs import Rung
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import (batch_shardings, batch_specs, cache_shardings,
                                 decode_specs, param_shardings, replicated)
-from repro.launch.steps import build_decode_step, build_prefill_step, build_train_step
+from repro.launch.steps import build_decode_step, build_prefill_step
 from repro.models.registry import build_model
 from repro.models.sharding import axis_rules
 from repro.optim.optimizers import sgd
@@ -70,12 +71,16 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         rec.update(status="skipped", reason=reason)
         return rec
     choice = choice or default_choice(arch, shape_name, multi_pod)
+    # the dry-run lowers exactly what the live engine would execute: the
+    # Rung is the executable face of the MeshChoice (engine/rungs.py)
+    rung = Rung.from_mesh_choice(choice, param_dtype="bfloat16")
     rec["choice"] = choice.name
+    rec["rung"] = rung.signature()
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
     rules = choice.rules()
-    model = build_model(cfg, impl=choice.attn_impl, chunk=choice.chunk,
-                        remat=choice.remat, param_dtype=jnp.bfloat16,
+    model = build_model(cfg, impl=rung.attn_impl, chunk=rung.chunk,
+                        remat=rung.remat, param_dtype=rung.dtype,
                         moe_cf=choice.moe_cf)
     params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
 
@@ -88,9 +93,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             p_shard = param_shardings(params_sds, mesh, rules)
             if shape.mode == "train":
                 opt = sgd()
-                comp = Compressor(choice.compression)
-                step = build_train_step(model, opt, microbatch=choice.microbatch,
-                                        compressor=comp)
+                comp = Compressor(rung.compression)
+                step = rung.train_step_fn(model, opt, compressor=comp)
                 state_sds = {"params": params_sds, "opt": (), "err": (),
                              "step": jax.ShapeDtypeStruct((), jnp.int32)}
                 state_shard = {"params": p_shard, "opt": (), "err": (),

@@ -1,18 +1,22 @@
-"""End-to-end training driver (runs on real devices; CPU-scale by default).
+"""Training CLI — a thin front-end over engine.session.TrainSession.
 
-Composes the full substrate: config -> model -> data pipeline -> optimizer ->
-(optional) compression -> checkpoint manager -> fault-tolerant train loop with
-Swan interference monitoring. ``--arch`` accepts any registry config; use
-reduced configs + small shapes on CPU.
+Composes config -> model -> data pipeline -> optimizer -> (optional)
+compression -> checkpoint manager, then hands the loop to the engine. With
+``--adaptive`` the session runs a Rung downgrade ladder under Swan's
+controller and migrates in place when interference appears;
+``--interference-trace`` injects synthetic co-tenant bursts
+(``start:stop:slowdown[,...]``) so the adaptive path can be exercised on a
+quiet machine. ``--arch`` accepts any registry config; use reduced configs +
+small shapes on CPU.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --reduced \
       --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+  ... --adaptive --interference-trace 40:80:3.0
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -20,10 +24,11 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config
-from repro.core.interference import InterferenceMonitor
 from repro.data.pipeline import synthetic_cnn_batch, synthetic_lm_batch
-from repro.launch.steps import build_train_step, init_train_state
-from repro.models.registry import build_model
+from repro.engine.events import InterferenceTrace
+from repro.engine.rungs import Rung, default_rung_ladder
+from repro.engine.session import TrainSession
+from repro.kernels.backend import auto_attn_impl
 from repro.optim.compression import Compressor
 from repro.optim.optimizers import adam, sgd
 
@@ -58,13 +63,21 @@ def main(argv=None):
     ap.add_argument("--microbatch", type=int, default=1)
     ap.add_argument("--attn-impl", default="auto",
                     choices=["auto", "naive", "chunked", "pallas"],
-                    help="attention kernel; auto = naive for short seq, "
-                         "chunked beyond 512")
+                    help="attention kernel; auto consults backend capability "
+                         "and sequence length (kernels/backend.auto_attn_impl)")
     ap.add_argument("--compression", default="none")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--adaptive", action="store_true",
+                    help="run the Rung downgrade ladder under Swan's "
+                         "controller instead of one static step")
+    ap.add_argument("--interference-trace", default=None,
+                    help="synthetic co-tenant bursts, e.g. '40:80:2.5,120:140:3'")
+    ap.add_argument("--upgrade-patience", type=int, default=5)
+    ap.add_argument("--timeline-out", default=None,
+                    help="write the migration timeline JSON here")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -72,13 +85,22 @@ def main(argv=None):
         cfg = cfg.reduced()
     impl = args.attn_impl
     if impl == "auto":
-        impl = "naive" if args.seq <= 512 else "chunked"
-    model = build_model(cfg, impl=impl)
+        impl = auto_attn_impl(args.seq)
     opt = sgd() if args.optimizer == "sgd" else adam()
     comp = Compressor(args.compression)
-    step_fn = jax.jit(build_train_step(model, opt, microbatch=args.microbatch,
-                                       lr=args.lr, compressor=comp))
-    batch_fn = make_batch_fn(cfg, args.batch, args.seq)
+
+    if args.adaptive:
+        rungs = default_rung_ladder(batch=args.batch,
+                                    microbatch=args.microbatch,
+                                    attn_impl=impl)
+        if len(rungs) == 1:
+            print(f"[swan] warning: --batch {args.batch} leaves no deeper "
+                  f"accumulation rungs; --adaptive has nothing to migrate to")
+    else:
+        rungs = [Rung(name="static", microbatch=args.microbatch,
+                      attn_impl=impl)]
+    trace = InterferenceTrace.parse(args.interference_trace) \
+        if args.interference_trace else None
 
     mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     state = None
@@ -89,30 +111,27 @@ def main(argv=None):
             start, state = restored
             state = jax.tree_util.tree_map(jnp.asarray, state)
             print(f"resumed from step {start}")
-    if state is None:
-        state = init_train_state(model, opt, jax.random.PRNGKey(0), compressor=comp)
+    if start >= args.steps:
+        print(f"nothing to do: resumed step {start} >= --steps {args.steps}")
+        return []
 
-    monitor = None
-    losses = []
-    for step in range(start, args.steps):
-        t0 = time.time()
-        state, metrics = step_fn(state, batch_fn(step))
-        loss = float(metrics["loss"])
-        dt = time.time() - t0
-        if monitor is None and step > start + 1:
-            monitor = InterferenceMonitor(expected_latency_s=dt)
-        elif monitor is not None:
-            monitor.observe(dt)
-            if monitor.interfering:
-                print(f"[swan] interference inferred at step {step} "
-                      f"(severity {monitor.severity:.2f})")
-        losses.append(loss)
-        if step % args.log_every == 0 or step == args.steps - 1:
-            print(f"step {step:5d} loss {loss:8.4f} ({dt * 1e3:.0f} ms)")
-        if mgr and (step + 1) % args.ckpt_every == 0:
-            mgr.save(step + 1, state)
-    if mgr:
-        mgr.save(args.steps, state)
+    session = TrainSession(
+        cfg, rungs, optimizer=opt, lr=args.lr, compressor=comp,
+        batch_fn=make_batch_fn(cfg, args.batch, args.seq),
+        ckpt=mgr, ckpt_every=args.ckpt_every, trace=trace,
+        adaptive=args.adaptive, upgrade_patience=args.upgrade_patience,
+        log_every=args.log_every)
+    result = session.run(args.steps, start=start, state=state)
+
+    losses = result.losses
+    summary = result.timeline.summary()
+    if args.adaptive or trace:
+        print(f"[swan] migrations: {summary['n_migrations']} "
+              f"(down {summary['downgrades']}, up {summary['upgrades']}), "
+              f"final rung {result.final_rung}")
+    if args.timeline_out:
+        result.timeline.save(args.timeline_out)
+        print(f"[swan] timeline -> {args.timeline_out}")
     print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
     return losses
 

@@ -49,14 +49,23 @@ class ElasticController:
                 return shape
         return self.candidates[-1]
 
-    def make_mesh(self, axis_names=("data", "model"), devices=None):
-        shape = self.current_shape()
+    def make_mesh(self, axis_names=("data", "model"), devices=None, shape=None):
+        """Mesh over the healthy pool. ``shape`` overrides the ladder pick
+        (used when a Rung pins its own mesh shape) but must fit the pool."""
+        if shape is None:
+            shape = self.current_shape()
+        elif int(np.prod(shape)) > self.n_healthy:
+            raise ValueError(f"mesh shape {shape} needs {int(np.prod(shape))} "
+                             f"devices, only {self.n_healthy} healthy")
         devices = devices if devices is not None else jax.devices()
         healthy = [d for d, ok in zip(devices, self._healthy) if ok]
         size = int(np.prod(shape))
         devs = np.array(healthy[:size]).reshape(shape)
         names = axis_names[-len(shape):]
         return jax.sharding.Mesh(devs, names)
+
+    def healthy_ids(self) -> List[int]:
+        return [i for i, ok in enumerate(self._healthy) if ok]
 
 
 def default_mesh_ladder(total: int) -> List[Tuple[int, ...]]:
@@ -68,7 +77,9 @@ def default_mesh_ladder(total: int) -> List[Tuple[int, ...]]:
         n *= 2
     while n >= 1:
         model = 1
-        while model * model <= n and model < 32:
+        # the model*2 <= n guard keeps the doubling from overshooting the
+        # pool itself (without it, n=1 yields the degenerate shape (0, 2))
+        while model * model <= n and model * 2 <= n and model < 32:
             model *= 2
         ladder.append((n // model, model))
         n //= 2
