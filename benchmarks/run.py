@@ -18,13 +18,14 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names "
-                         "(fig1b,fig2,table2,table3,table4,kernels)")
+                         "(fig1b,fig2,table2,table3,table4,kernels,decode)")
     ap.add_argument("--json-out", default="BENCH_run.json",
                     help="machine-readable results path ('' disables)")
     args = ap.parse_args()
 
-    from benchmarks import (figure1b_matmul, figure2_choices, kernel_bench,
-                            table2_local, table3_interference, table4_fl)
+    from benchmarks import (decode_bench, figure1b_matmul, figure2_choices,
+                            kernel_bench, table2_local, table3_interference,
+                            table4_fl)
     benches = {
         "fig1b": figure1b_matmul.run,
         "fig2": figure2_choices.run,
@@ -32,6 +33,7 @@ def main() -> None:
         "table3": table3_interference.run,
         "table4": lambda: table4_fl.run(fast=not args.full),
         "kernels": lambda: kernel_bench.run(fast=not args.full),
+        "decode": lambda: decode_bench.run(fast=not args.full),
     }
     if args.only:
         keep = set(args.only.split(","))

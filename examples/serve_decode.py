@@ -1,4 +1,9 @@
-"""Batched serving demo: prefill + KV-cache decode on a reduced llama config.
+"""Continuous-batching serving demo on a reduced llama config.
+
+Streams a ragged request mix through the slot-based engine (per-sequence
+cache lengths, mid-stream retirement and admission) and prints tokens/sec
+plus slot occupancy. ``--lockstep`` falls back to the legacy fixed-batch
+loop; non-KV-cache families (whisper, rwkv, zamba) use it automatically.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py [--arch llama3.2-1b]
 """
@@ -10,11 +15,19 @@ from repro.launch import serve as S
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4, help="serving slots")
+    ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--attn-impl", default="auto",
+                    choices=("auto", "naive", "pallas"))
+    ap.add_argument("--lockstep", action="store_true")
     args = ap.parse_args()
-    S.main(["--arch", args.arch, "--reduced", "--batch", str(args.batch),
-            "--prompt-len", "32", "--gen", str(args.gen)])
+    argv = ["--arch", args.arch, "--reduced", "--batch", str(args.batch),
+            "--requests", str(args.requests), "--prompt-len", "32",
+            "--gen", str(args.gen), "--attn-impl", args.attn_impl]
+    if args.lockstep:
+        argv.append("--lockstep")
+    S.main(argv)
 
 
 if __name__ == "__main__":

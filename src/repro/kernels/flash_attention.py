@@ -43,8 +43,24 @@ never differentiates the Pallas forward. Heads are pre-broadcast by the
 wrapper (GQA handled in ops.py, whose broadcast transpose sums dk/dv over the
 query-head group).
 
-Remaining (tracked in ROADMAP.md): dropout, sliding-window masking, a decode
-(single-query) kernel, and bf16 accumulation controls.
+Decode kernel
+-------------
+``flash_decode`` is the serving-path sibling: one query *token* per (batch,
+kv-head) program, grid (B, K, kv_blocks). The query block holds the whole
+GQA group — (G, hd) query rows that share one KV head — so each KV tile is
+DMA'd once per group instead of once per query head. Per-sequence valid
+lengths arrive via scalar prefetch (``PrefetchScalarGridSpec``): the KV
+index maps clamp tiles past ``lengths[b]`` to the last live tile (re-fetch
+of a resident block, no dead DMA) and ``pl.when`` predicates their compute
+away, so a ragged continuous batch streams only the cache it actually has.
+The MLA variant runs in the latent space (k = [latent | k_rope], v = latent)
+via the same kernel with K=1, G=H and an explicit softmax scale.
+
+bf16 accumulation (``REPRO_ATTN_BF16`` / ``lowp=``): dot-product inputs drop
+to bf16 — halving the KV bytes the MXU pulls per tile — while online-softmax
+statistics and the output accumulator stay f32, matching the chunked path.
+
+Remaining (tracked in ROADMAP.md): dropout, sliding-window masking.
 """
 from __future__ import annotations
 
@@ -57,8 +73,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.backend import (divisor_block, resolve_interpret,
-                                   tpu_compiler_params)
+from repro.kernels.backend import (attn_bf16, divisor_block,
+                                   resolve_interpret, tpu_compiler_params)
 
 NEG_INF = -1e30
 _LANES = 128  # TPU lane width: m/l scratch rides (block_q, 128)
@@ -85,7 +101,7 @@ def _grid_params(interpret: bool):
 
 def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
                 block_q: int, block_k: int, causal: bool, q_offset: int,
-                scale: float, n_kv: int):
+                scale: float, n_kv: int, lowp: bool):
     qi, ji = pl.program_id(2), pl.program_id(3)
 
     @pl.when(ji == 0)
@@ -103,9 +119,10 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
 
     @pl.when(live)
     def _():
-        q = q_ref[0, 0].astype(jnp.float32) * scale
-        k = k_ref[0, 0].astype(jnp.float32)
-        v = v_ref[0, 0].astype(jnp.float32)
+        cdt = jnp.bfloat16 if lowp else jnp.float32
+        q = (q_ref[0, 0].astype(jnp.float32) * scale).astype(cdt)
+        k = k_ref[0, 0].astype(cdt)
+        v = v_ref[0, 0].astype(cdt)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         if causal:
@@ -119,7 +136,8 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
         corr = jnp.exp(m_prev - m_new)
         l_new = l_prev * corr + p.sum(-1, keepdims=True)
         acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+            p.astype(cdt), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
         m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
         l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
 
@@ -132,7 +150,7 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
 
 
 def _fwd_call(q, k, v, *, causal: bool, q_offset: int, bq: int, bk: int,
-              interpret: bool):
+              interpret: bool, lowp: bool = False):
     B, H, Sq, hd = q.shape
     Sk = k.shape[2]
     n_q, n_kv = Sq // bq, Sk // bk
@@ -145,7 +163,7 @@ def _fwd_call(q, k, v, *, causal: bool, q_offset: int, bq: int, bk: int,
 
     return pl.pallas_call(
         functools.partial(_fwd_kernel, block_q=bq, block_k=bk, causal=causal,
-                          q_offset=q_offset, scale=scale, n_kv=n_kv),
+                          q_offset=q_offset, scale=scale, n_kv=n_kv, lowp=lowp),
         grid=(B, H, n_q, n_kv),
         in_specs=[
             pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
@@ -177,7 +195,7 @@ def _fwd_call(q, k, v, *, causal: bool, q_offset: int, bq: int, bk: int,
 
 def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
                dq_scr, *, block_q: int, block_k: int, causal: bool,
-               q_offset: int, scale: float, n_kv: int):
+               q_offset: int, scale: float, n_kv: int, lowp: bool):
     qi, ji = pl.program_id(2), pl.program_id(3)
 
     @pl.when(ji == 0)
@@ -192,10 +210,11 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
 
     @pl.when(live)
     def _():
-        q = q_ref[0, 0].astype(jnp.float32)
-        k = k_ref[0, 0].astype(jnp.float32)
-        v = v_ref[0, 0].astype(jnp.float32)
-        do = do_ref[0, 0].astype(jnp.float32)
+        cdt = jnp.bfloat16 if lowp else jnp.float32
+        q = q_ref[0, 0].astype(cdt)
+        k = k_ref[0, 0].astype(cdt)
+        v = v_ref[0, 0].astype(cdt)
+        do = do_ref[0, 0].astype(cdt)
         lse = lse_ref[0, 0][:, None]
         delta = delta_ref[0, 0][:, None]
         s = scale * jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
@@ -206,7 +225,7 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
                           p, 0.0)
         dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
-        ds = p * (dp - delta)
+        ds = (p * (dp - delta)).astype(cdt)
         dq_scr[...] += scale * jax.lax.dot_general(
             ds, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
 
@@ -222,7 +241,8 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
 
 def _dkv_kernel(k_ref, v_ref, q_ref, do_ref, lse_ref, delta_ref, dk_ref,
                 dv_ref, dk_scr, dv_scr, *, block_q: int, block_k: int,
-                causal: bool, q_offset: int, scale: float, n_q: int):
+                causal: bool, q_offset: int, scale: float, n_q: int,
+                lowp: bool):
     ji, qi = pl.program_id(2), pl.program_id(3)
 
     @pl.when(qi == 0)
@@ -236,10 +256,11 @@ def _dkv_kernel(k_ref, v_ref, q_ref, do_ref, lse_ref, delta_ref, dk_ref,
 
     @pl.when(live)
     def _():
-        q = q_ref[0, 0].astype(jnp.float32)
-        k = k_ref[0, 0].astype(jnp.float32)
-        v = v_ref[0, 0].astype(jnp.float32)
-        do = do_ref[0, 0].astype(jnp.float32)
+        cdt = jnp.bfloat16 if lowp else jnp.float32
+        q = q_ref[0, 0].astype(cdt)
+        k = k_ref[0, 0].astype(cdt)
+        v = v_ref[0, 0].astype(cdt)
+        do = do_ref[0, 0].astype(cdt)
         lse = lse_ref[0, 0][:, None]
         delta = delta_ref[0, 0][:, None]
         s = scale * jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
@@ -249,10 +270,11 @@ def _dkv_kernel(k_ref, v_ref, q_ref, do_ref, lse_ref, delta_ref, dk_ref,
             p = jnp.where(_causal_mask(s, qi, ji, block_q, block_k, q_offset),
                           p, 0.0)
         dv_scr[...] += jax.lax.dot_general(
-            p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+            p.astype(cdt), do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
         dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
-        ds = p * (dp - delta)
+        ds = (p * (dp - delta)).astype(cdt)
         dk_scr[...] += scale * jax.lax.dot_general(
             ds, q, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
 
@@ -263,7 +285,7 @@ def _dkv_kernel(k_ref, v_ref, q_ref, do_ref, lse_ref, delta_ref, dk_ref,
 
 
 def _bwd_call(q, k, v, o, lse, do, *, causal: bool, q_offset: int, bq: int,
-              bk: int, interpret: bool):
+              bk: int, interpret: bool, lowp: bool = False):
     B, H, Sq, hd = q.shape
     Sk = k.shape[2]
     n_q, n_kv = Sq // bq, Sk // bk
@@ -277,7 +299,7 @@ def _bwd_call(q, k, v, o, lse, do, *, causal: bool, q_offset: int, bq: int,
 
     dq = pl.pallas_call(
         functools.partial(_dq_kernel, block_q=bq, block_k=bk, causal=causal,
-                          q_offset=q_offset, scale=scale, n_kv=n_kv),
+                          q_offset=q_offset, scale=scale, n_kv=n_kv, lowp=lowp),
         grid=(B, H, n_q, n_kv),
         in_specs=[
             pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
@@ -306,7 +328,7 @@ def _bwd_call(q, k, v, o, lse, do, *, causal: bool, q_offset: int, bq: int,
 
     dk, dv = pl.pallas_call(
         functools.partial(_dkv_kernel, block_q=bq, block_k=bk, causal=causal,
-                          q_offset=q_offset, scale=scale, n_q=n_q),
+                          q_offset=q_offset, scale=scale, n_q=n_q, lowp=lowp),
         grid=(B, H, n_kv, n_q),
         in_specs=[
             pl.BlockSpec((1, 1, bk, hd), lambda b, h, j, i: (b, h, j, 0)),
@@ -337,49 +359,168 @@ def _bwd_call(q, k, v, o, lse, do, *, causal: bool, q_offset: int, bq: int,
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
-def _flash_mha(q, k, v, causal, q_offset, bq, bk, interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash_mha(q, k, v, causal, q_offset, bq, bk, interpret, lowp):
     o, _ = _fwd_call(q, k, v, causal=causal, q_offset=q_offset, bq=bq, bk=bk,
-                     interpret=interpret)
+                     interpret=interpret, lowp=lowp)
     return o
 
 
-def _flash_mha_fwd(q, k, v, causal, q_offset, bq, bk, interpret):
+def _flash_mha_fwd(q, k, v, causal, q_offset, bq, bk, interpret, lowp):
     o, lse = _fwd_call(q, k, v, causal=causal, q_offset=q_offset, bq=bq, bk=bk,
-                       interpret=interpret)
+                       interpret=interpret, lowp=lowp)
     return o, (q, k, v, o, lse)
 
 
-def _flash_mha_bwd(causal, q_offset, bq, bk, interpret, res, do):
+def _flash_mha_bwd(causal, q_offset, bq, bk, interpret, lowp, res, do):
     q, k, v, o, lse = res
     dq, dk, dv = _bwd_call(q, k, v, o, lse, do, causal=causal,
-                           q_offset=q_offset, bq=bq, bk=bk, interpret=interpret)
+                           q_offset=q_offset, bq=bq, bk=bk, interpret=interpret,
+                           lowp=lowp)
     return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
 
 
 _flash_mha.defvjp(_flash_mha_fwd, _flash_mha_bwd)
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "q_offset", "block_q",
-                                             "block_k", "interpret"))
 def flash_attention_mha(q, k, v, *, causal: bool = True, q_offset: int = 0,
                         block_q: int = 128, block_k: int = 128,
-                        interpret: Optional[bool] = None):
-    """q,k,v: (B,H,S,hd) same head count. Returns (B,H,Sq,hd); differentiable."""
+                        interpret: Optional[bool] = None,
+                        lowp: Optional[bool] = None):
+    """q,k,v: (B,H,S,hd) same head count. Returns (B,H,Sq,hd); differentiable.
+
+    ``interpret`` and ``lowp`` (bf16 dot inputs, REPRO_ATTN_BF16) resolve
+    eagerly here — outside any jit — so env flips take effect per call.
+    """
     _, _, Sq, _ = q.shape
     Sk = k.shape[2]
     bq = divisor_block(Sq, block_q)
     bk = divisor_block(Sk, block_k)
     return _flash_mha(q, k, v, causal, q_offset, bq, bk,
-                      resolve_interpret(interpret))
+                      resolve_interpret(interpret), attn_bf16(lowp))
 
 
 def flash_attention_fwd_lse(q, k, v, *, causal: bool = True, q_offset: int = 0,
                             block_q: int = 128, block_k: int = 128,
-                            interpret: Optional[bool] = None):
+                            interpret: Optional[bool] = None,
+                            lowp: Optional[bool] = None):
     """Forward that also returns the (B,H,Sq) log-sum-exp residual rows."""
     Sq, Sk = q.shape[2], k.shape[2]
     return _fwd_call(q, k, v, causal=causal, q_offset=q_offset,
                      bq=divisor_block(Sq, block_q),
                      bk=divisor_block(Sk, block_k),
-                     interpret=resolve_interpret(interpret))
+                     interpret=resolve_interpret(interpret),
+                     lowp=attn_bf16(lowp))
+
+
+# ---------------------------------------------------------------------------
+# decode: single query token, per-sequence valid lengths
+# ---------------------------------------------------------------------------
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, block_k: int, scale: float, n_kv: int, lowp: bool):
+    b, ji = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(ji == 0)
+    def _():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+
+    @pl.when(ji * block_k < length)
+    def _():
+        cdt = jnp.bfloat16 if lowp else jnp.float32
+        q = (q_ref[0, 0].astype(jnp.float32) * scale).astype(cdt)  # (G, hd)
+        k = k_ref[0, :, 0].astype(cdt)                             # (bk, hd)
+        v = v_ref[0, :, 0].astype(cdt)                             # (bk, hdv)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        kv_idx = ji * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kv_idx < length, s, NEG_INF)
+        m_prev = m_scr[:, :1]
+        l_prev = l_scr[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p.astype(cdt), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ji == n_kv - 1)
+    def _():
+        l = jnp.maximum(l_scr[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def _decode_grid_params(interpret: bool):
+    if interpret:
+        return {}
+    return {"compiler_params": tpu_compiler_params(
+        dimension_semantics=("parallel", "parallel", "arbitrary"))}
+
+
+def flash_decode(q, k, v, lengths, *, scale: Optional[float] = None,
+                 block_k: int = 256, interpret: Optional[bool] = None,
+                 lowp: Optional[bool] = None):
+    """Single-query flash decode over a ragged KV cache.
+
+    q: (B, K, G, hd) — one new token's query heads, grouped so the G query
+       heads sharing KV head k sit together (GQA: G = H // K; MHA: G = 1).
+    k: (B, Smax, K, hd)   v: (B, Smax, K, hdv) — the KV cache buffers.
+    lengths: (B,) int32 — row b attends to cache positions < lengths[b];
+       rows with length 0 (idle serving slots) produce zeros, not NaNs.
+
+    Grid is (B, K, kv_blocks) with the online-softmax carry in VMEM scratch;
+    ``lengths`` rides scalar prefetch so the KV BlockSpec index maps clamp
+    tiles past the valid length to the last live tile (no dead-cache DMA) and
+    their grid steps are compute-predicated away. Returns (B, K, G, hdv).
+    Serving path only: no custom_vjp (decode never backpropagates).
+    """
+    B, K, G, hd = q.shape
+    Smax = k.shape[1]
+    hdv = v.shape[-1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(hd)
+    bk = divisor_block(Smax, block_k)
+    n_kv = Smax // bk
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+    interp = resolve_interpret(interpret)
+
+    def q_index(b, kh, j, len_ref):
+        return (b, kh, 0, 0)
+
+    def kv_index(b, kh, j, len_ref):
+        # clamp dead tiles past lengths[b] to the last live one: the pipeline
+        # re-fetches a resident block instead of DMA-ing cache it won't read
+        j = jnp.minimum(j, jnp.maximum(pl.cdiv(len_ref[b], bk) - 1, 0))
+        return (b, j, kh, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, K, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), q_index),
+            pl.BlockSpec((1, bk, 1, hd), kv_index),
+            pl.BlockSpec((1, bk, 1, hdv), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hdv), q_index),
+        scratch_shapes=[
+            pltpu.VMEM((G, _LANES), jnp.float32),
+            pltpu.VMEM((G, _LANES), jnp.float32),
+            pltpu.VMEM((G, hdv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, block_k=bk, scale=scale, n_kv=n_kv,
+                          lowp=attn_bf16(lowp)),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hdv), q.dtype),
+        interpret=interp,
+        **_decode_grid_params(interp),
+    )(lengths, q, k, v)

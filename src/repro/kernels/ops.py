@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from repro.kernels import ref  # noqa: F401  (oracles re-exported for callers)
 from repro.kernels.backend import default_interpret as _interpret  # noqa: F401
 from repro.kernels.depthwise_conv import depthwise_conv as _dw
-from repro.kernels.flash_attention import flash_attention_mha
+from repro.kernels.flash_attention import flash_attention_mha, flash_decode
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 
 
@@ -51,3 +51,39 @@ def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0):
     vt = v.transpose(0, 2, 1, 3)
     out = flash_attention_mha(qt, kt, vt, causal=causal, q_offset=q_offset)
     return out.transpose(0, 2, 1, 3)
+
+
+def decode_attention(q, k, v, lengths, *, block_k: int = 256):
+    """Single-token GQA decode against a ragged KV cache, fused.
+
+    q: (B, 1, H, hd) — the new token's queries (cache already updated).
+    k,v: (B, Smax, K, hd) cache buffers; lengths: (B,) or scalar valid counts.
+
+    Unlike the prefill wrapper above, the KV heads are NOT broadcast to H —
+    the kernel's query block holds the whole (G = H//K) query group, so each
+    cache tile is streamed once per KV head. That is the decode win: the
+    bytes moved per token drop from H/K x cache to 1 x cache.
+    """
+    B, _, H, hd = q.shape
+    K = k.shape[2]
+    qg = q.reshape(B, K, H // K, hd)  # (B,1,H,hd) -> grouped, same head order
+    out = flash_decode(qg, k, v, lengths, block_k=block_k)
+    return out.reshape(B, 1, H, v.shape[-1])
+
+
+def decode_attention_mla(q_lat, q_rope, latent, k_rope, lengths, *,
+                         scale: float, block_k: int = 256):
+    """Absorbed-matrix MLA decode in the latent space, fused.
+
+    q_lat: (B, 1, H, r) query absorbed through W_UK; q_rope: (B, 1, H, rd).
+    latent: (B, Smax, r) cache; k_rope: (B, Smax, rd) cache.
+
+    Keys are the concatenation [latent | k_rope] and values are the latent
+    itself, so the same single-query kernel runs with K=1, G=H and an
+    explicit softmax scale (1/sqrt(nope+rope), not 1/sqrt(r+rope)). Returns
+    the latent-space context (B, 1, H, r); the caller applies W_UV.
+    """
+    q = jnp.concatenate([q_lat, q_rope], -1)  # (B, K=1, G=H, r+rd)
+    kv = jnp.concatenate([latent, k_rope.astype(latent.dtype)], -1)[:, :, None]
+    val = latent[:, :, None]
+    return flash_decode(q, kv, val, lengths, scale=scale, block_k=block_k)

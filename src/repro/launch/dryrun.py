@@ -120,7 +120,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                                   out_shardings=(logits_shard, c_shard)
                                   ).lower(params_sds, batch_sds)
             else:  # decode
-                fn = build_decode_step(model)
+                # raw step: the AOT jit below owns shardings + donation
+                fn = build_decode_step(model, jit=False)
                 inputs, cache_sds = decode_specs(model, cfg, shape)
                 c_shard = cache_shardings(cache_sds, mesh, rules)
                 tok_shard = batch_shardings({"t": inputs["tokens"]}, mesh, rules)["t"]

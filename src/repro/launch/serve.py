@@ -1,57 +1,219 @@
-"""Serving driver: batched prefill + decode with a KV cache (CPU-scale demo).
+"""Serving driver: continuous batching over a slotted KV cache.
+
+The engine serves a *stream* of requests rather than one lockstep batch:
+each of ``max_batch`` cache slots carries its own ``cache_len``, finished
+sequences (EOS or length budget) retire immediately, and queued requests are
+admitted into freed slots mid-stream — throughput is measured under the
+ragged traffic a real endpoint sees, which is where Swan's pick-the-config-
+that-fits-the-hardware argument bites for decode (KV-bandwidth-bound).
+
+Mechanics per decode step:
+  - one jitted decode over all slots with a per-slot (B,) cache_len vector;
+    the cache is donated (``build_decode_step``) so the per-token update is
+    in place, never a full-cache copy;
+  - admission runs single-request prefill and splices the (L, 1, P, ...)
+    prefill cache into the slot with one donated dynamic_update_slice;
+  - idle slots decode garbage that is masked out on the host — their
+    frozen cache_len keeps the math well-defined and their KV tiles are
+    skipped by the Pallas decode kernel's length-clamped index maps.
+
+``--attn-impl pallas`` routes decode attention through the fused
+single-query flash-decode kernel (kernels/flash_attention.flash_decode);
+``auto`` consults kernels/backend.auto_decode_impl (cache length x backend).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
-      --batch 4 --prompt-len 32 --gen 16
+      --batch 4 --requests 12 --prompt-len 32 --gen 16
 """
 from __future__ import annotations
 
 import argparse
+import collections
+import dataclasses
+import json
 import time
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.data.pipeline import synthetic_lm_batch
+from repro.kernels.backend import auto_decode_impl
 from repro.launch.steps import build_decode_step
 from repro.models.registry import build_model
 
+# families whose decode state is a slotted (L, B, Smax, ...) KV cache the
+# engine knows how to splice; SSM/hybrid state and encoder-decoder cross
+# caches stay on the legacy lockstep path below
+ENGINE_FAMILIES = ("dense", "moe")
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-1b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    if cfg.family == "cnn":
-        raise SystemExit("CNN archs have no decode path")
-    model = build_model(cfg, impl="naive")
-    params = model.init(jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
-    batch = synthetic_lm_batch(rng, args.batch, args.prompt_len, cfg.vocab_size)
-    if cfg.family == "vlm":
-        batch["image_embed"] = jnp.asarray(
-            rng.standard_normal((args.batch, cfg.n_image_tokens, cfg.d_model)),
-            jnp.float32) * 0.02
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (P,) int32 prompt tokens
+    max_new_tokens: int
+
+
+@dataclasses.dataclass
+class Finished:
+    uid: int
+    tokens: List[int]  # generated token ids (first comes from prefill logits)
+    reason: str  # "eos" | "length"
+    prompt_len: int
+
+
+class ContinuousBatchingEngine:
+    """Slot-based continuous batching over a model's KV-cache decode path."""
+
+    def __init__(self, model, params, *, max_batch: int, max_seq: int,
+                 eos_id: Optional[int] = None, cache_dtype=jnp.float32):
+        cfg = model.cfg
+        if cfg.family not in ENGINE_FAMILIES:
+            raise ValueError(
+                f"continuous batching needs a slotted KV cache; family "
+                f"{cfg.family!r} is served by the legacy lockstep path")
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+
+        self.cache = model.init_cache(max_batch, max_seq, cache_dtype)
+        self.cache_len = np.zeros(max_batch, np.int32)
+        self.tokens = np.zeros((max_batch, 1), np.int32)
+        self.slot_uid: List[Optional[int]] = [None] * max_batch
+        self.slot_budget = np.zeros(max_batch, np.int32)
+        self.generated: List[List[int]] = [[] for _ in range(max_batch)]
+
+        self.queue: Deque[Request] = collections.deque()
+        self.finished: Dict[int, Finished] = {}
+        self.decode_steps = 0
+        self.tokens_out = 0
+        self._active_slot_steps = 0
+        self._uid_prompt_len: Dict[int, int] = {}
+
+        self._decode = build_decode_step(model)  # jitted, cache donated
+        self._prefill = jax.jit(model.prefill)  # one compile per prompt length
+
+        def splice(cache, pcache, slot):
+            def one(buf, pc):
+                start = (jnp.int32(0), slot) + (jnp.int32(0),) * (buf.ndim - 2)
+                return jax.lax.dynamic_update_slice(buf, pc.astype(buf.dtype), start)
+
+            return jax.tree_util.tree_map(one, cache, pcache)
+
+        self._splice = jax.jit(splice, donate_argnums=(0,))
+
+    # -- request lifecycle -------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) >= self.max_seq:
+            raise ValueError(f"prompt {req.uid} ({len(req.prompt)} tokens) "
+                             f"does not fit max_seq={self.max_seq}")
+        self.queue.append(req)
+
+    def _admit(self, slot: int, req: Request) -> None:
+        P = len(req.prompt)
+        logits, pcache = self._prefill(
+            self.params, {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]})
+        self.cache = self._splice(self.cache, pcache, jnp.int32(slot))
+        first = int(jnp.argmax(logits[0, -1]))
+        self.slot_uid[slot] = req.uid
+        self.slot_budget[slot] = req.max_new_tokens
+        self.cache_len[slot] = P
+        self.tokens[slot, 0] = first
+        self.generated[slot] = [first]
+        self._uid_prompt_len[req.uid] = P
+        self.tokens_out += 1
+        if self._should_retire(slot, first):  # budget of 1, or prefill hit EOS
+            self._retire(slot, "eos" if first == self.eos_id else "length")
+
+    def _should_retire(self, slot: int, tok: int) -> bool:
+        if self.eos_id is not None and tok == self.eos_id:
+            return True
+        if len(self.generated[slot]) >= int(self.slot_budget[slot]):
+            return True
+        # the next decode writes at position cache_len; retire only once that
+        # would fall off the cache — position max_seq-1 is still serveable
+        return self.cache_len[slot] >= self.max_seq
+
+    def _retire(self, slot: int, reason: str) -> None:
+        uid = self.slot_uid[slot]
+        self.finished[uid] = Finished(
+            uid=uid, tokens=list(self.generated[slot]), reason=reason,
+            prompt_len=self._uid_prompt_len.pop(uid))
+        self.slot_uid[slot] = None
+        # cache_len stays frozen: the stale KV keeps idle-slot math
+        # well-defined and is overwritten by the next admission's splice
+
+    # -- stepping ----------------------------------------------------------
+
+    def _admit_waiting(self) -> None:
+        for slot in range(self.max_batch):
+            if not self.queue:
+                return
+            if self.slot_uid[slot] is None:
+                self._admit(slot, self.queue.popleft())
+
+    def step(self) -> List[Tuple[int, int]]:
+        """Admit waiting requests, run one batched decode, retire finishers.
+
+        Returns (uid, token) pairs emitted this step.
+        """
+        self._admit_waiting()
+        active = [s for s in range(self.max_batch) if self.slot_uid[s] is not None]
+        if not active:
+            return []
+        next_tok, _, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.tokens),
+            jnp.asarray(self.cache_len))
+        next_np = np.asarray(next_tok)
+        self.decode_steps += 1
+        self._active_slot_steps += len(active)
+        emitted = []
+        for slot in active:
+            tok = int(next_np[slot, 0])
+            self.generated[slot].append(tok)
+            self.cache_len[slot] += 1
+            self.tokens[slot, 0] = tok
+            self.tokens_out += 1
+            emitted.append((self.slot_uid[slot], tok))
+            if self._should_retire(slot, tok):
+                self._retire(slot, "eos" if (self.eos_id is not None and
+                                             tok == self.eos_id) else "length")
+        return emitted
+
+    def run(self, requests: List[Request]) -> Dict[int, Finished]:
+        for req in requests:
+            self.submit(req)
+        while self.queue or any(u is not None for u in self.slot_uid):
+            self.step()
+        return self.finished
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of slots active per decode step (batching efficiency)."""
+        if not self.decode_steps:
+            return 0.0
+        return self._active_slot_steps / (self.decode_steps * self.max_batch)
+
+
+# ---------------------------------------------------------------------------
+# legacy lockstep path (SSM / hybrid / enc-dec / VLM families)
+# ---------------------------------------------------------------------------
+
+
+def lockstep_generate(model, params, batch, *, prompt_len: int,
+                      gen: int) -> jnp.ndarray:
+    """Fixed-batch, fixed-length generation (the pre-engine serve loop)."""
+    cfg = model.cfg
+    max_len = prompt_len + gen
+    bsz = batch["tokens"].shape[0]
     if cfg.family == "encdec":
-        batch["audio_embed"] = jnp.asarray(
-            rng.standard_normal((args.batch, cfg.n_audio_frames, cfg.d_model)),
-            jnp.float32) * 0.02
-
-    max_len = args.prompt_len + args.gen
-    t0 = time.time()
-    if cfg.family == "encdec":
-        # encoder once, then pure decode (prompt = BOS only)
         from repro.models import encdec as E
-        cache = model.init_cache(args.batch, max_len, jnp.float32)
+        cache = model.init_cache(bsz, max_len, jnp.float32)
         enc_h = E.encode(params, cfg, jnp.asarray(batch["audio_embed"]))
         ks, vs = [], []
         for i in range(cfg.n_layers):
@@ -61,37 +223,137 @@ def main(argv=None):
             ks.append((enc_h @ lp["cross_attn"]["wk"]).reshape(B, Senc, cfg.n_kv_heads, hd))
             vs.append((enc_h @ lp["cross_attn"]["wv"]).reshape(B, Senc, cfg.n_kv_heads, hd))
         cache["cross"] = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
-        tokens = jnp.zeros((args.batch, 1), jnp.int32)
+        tokens = jnp.zeros((bsz, 1), jnp.int32)
         pos0 = 0
     else:
         logits, pcache = model.prefill(params, {k: jnp.asarray(v) for k, v in batch.items()})
-        cache = model.init_cache(args.batch, max_len, jnp.float32)
-        # copy prefill caches into the decode buffers
+        cache = model.init_cache(bsz, max_len, jnp.float32)
+
         def splice(buf, pc):
-            if buf.ndim >= 3 and pc.shape[2] == args.prompt_len and buf.shape[1] == args.batch:
-                return buf.at[:, :, :args.prompt_len].set(pc.astype(buf.dtype))
+            if buf.ndim >= 3 and pc.shape[2] == prompt_len and buf.shape[1] == bsz:
+                return buf.at[:, :, :prompt_len].set(pc.astype(buf.dtype))
             return pc.astype(buf.dtype) if pc.shape == buf.shape else buf
+
         if cfg.family in ("ssm", "hybrid"):
             cache = jax.tree_util.tree_map(lambda b, p: p.astype(b.dtype), cache, pcache)
         else:
             cache = jax.tree_util.tree_map(splice, cache, pcache)
         tokens = jnp.argmax(logits[:, -1:, :], -1).astype(jnp.int32)
-        pos0 = args.prompt_len
-    t_prefill = time.time() - t0
+        pos0 = prompt_len
 
-    step = jax.jit(build_decode_step(model))
+    step = build_decode_step(model)
     out_tokens = [tokens]
-    t0 = time.time()
-    for t in range(args.gen - 1):
-        tokens, logits, cache = step(params, cache, tokens, jnp.int32(pos0 + t))
+    for t in range(gen - 1):
+        tokens, _, cache = step(params, cache, tokens, jnp.int32(pos0 + t))
         out_tokens.append(tokens)
-    gen = jnp.concatenate(out_tokens, axis=1)
-    t_decode = time.time() - t0
-    print(f"arch={cfg.name} batch={args.batch} prefill {t_prefill*1e3:.0f}ms "
-          f"decode {args.gen - 1} steps in {t_decode*1e3:.0f}ms "
-          f"({(args.gen - 1) * args.batch / max(t_decode, 1e-9):.1f} tok/s)")
-    print("sample:", np.asarray(gen[0])[:12])
-    return gen
+    return jnp.concatenate(out_tokens, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def _synthetic_requests(rng, n: int, prompt_len: int, gen: int,
+                        vocab: int) -> List[Request]:
+    """A ragged request stream: prompt lengths and budgets vary per request
+    so retirement and admission interleave instead of running in lockstep."""
+    reqs = []
+    for uid in range(n):
+        p = max(2, prompt_len + int(rng.integers(-prompt_len // 2, prompt_len // 2 + 1)))
+        g = max(1, gen + int(rng.integers(-gen // 2, gen // 2 + 1)))
+        reqs.append(Request(uid=uid,
+                            prompt=rng.integers(0, vocab, p).astype(np.int32),
+                            max_new_tokens=g))
+    return reqs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4, help="serving slots")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="requests in the stream (default: 3x batch)")
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=0,
+                    help="cache capacity (default: 2*(prompt+gen))")
+    ap.add_argument("--attn-impl", default="auto",
+                    choices=("auto", "naive", "pallas"),
+                    help="decode attention path; auto resolves via "
+                         "kernels/backend.auto_decode_impl")
+    ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--lockstep", action="store_true",
+                    help="legacy fixed-batch loop (forced for SSM/hybrid/"
+                         "encdec/VLM families)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if cfg.family == "cnn":
+        raise SystemExit("CNN archs have no decode path")
+
+    max_seq = args.max_seq or 2 * (args.prompt_len + args.gen)
+    impl = args.attn_impl
+    if impl == "auto":
+        impl = auto_decode_impl(max_seq)
+    model = build_model(cfg, impl=impl)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(args.seed)
+
+    if args.lockstep or cfg.family not in ENGINE_FAMILIES:
+        from repro.data.pipeline import synthetic_lm_batch
+        batch = synthetic_lm_batch(rng, args.batch, args.prompt_len, cfg.vocab_size)
+        if cfg.family == "vlm":
+            batch["image_embed"] = jnp.asarray(
+                rng.standard_normal((args.batch, cfg.n_image_tokens, cfg.d_model)),
+                jnp.float32) * 0.02
+        if cfg.family == "encdec":
+            batch["audio_embed"] = jnp.asarray(
+                rng.standard_normal((args.batch, cfg.n_audio_frames, cfg.d_model)),
+                jnp.float32) * 0.02
+        t0 = time.time()
+        gen = lockstep_generate(model, params, batch,
+                                prompt_len=args.prompt_len, gen=args.gen)
+        dt = time.time() - t0
+        n_tok = args.gen * args.batch
+        print(f"arch={cfg.name} mode=lockstep impl={impl} batch={args.batch} "
+              f"{n_tok} tokens in {dt*1e3:.0f}ms ({n_tok/max(dt,1e-9):.1f} tok/s)")
+        print("sample:", np.asarray(gen[0])[:12])
+        return gen
+
+    n_req = args.requests or 3 * args.batch
+    reqs = _synthetic_requests(rng, n_req, args.prompt_len, args.gen,
+                               cfg.vocab_size)
+    engine = ContinuousBatchingEngine(model, params, max_batch=args.batch,
+                                      max_seq=max_seq, eos_id=args.eos_id)
+    t0 = time.time()
+    finished = engine.run(reqs)
+    dt = time.time() - t0
+    tok_s = engine.tokens_out / max(dt, 1e-9)
+    print(f"arch={cfg.name} mode=continuous impl={impl} slots={args.batch} "
+          f"requests={n_req} tokens={engine.tokens_out} "
+          f"steps={engine.decode_steps} occupancy={engine.occupancy:.2f} "
+          f"wall={dt*1e3:.0f}ms ({tok_s:.1f} tok/s)")
+    sample = finished[0].tokens[:12] if 0 in finished else []
+    print("sample uid=0:", sample)
+    if args.json_out:
+        payload = {
+            "arch": cfg.name, "impl": impl, "slots": args.batch,
+            "requests": n_req, "tokens": engine.tokens_out,
+            "steps": engine.decode_steps, "occupancy": round(engine.occupancy, 4),
+            "wall_s": round(dt, 4), "tok_s": round(tok_s, 2),
+            "finished": {str(u): {"reason": f.reason, "n_tokens": len(f.tokens),
+                                  "prompt_len": f.prompt_len}
+                         for u, f in finished.items()},
+        }
+        with open(args.json_out, "w") as f:
+            json.dump(payload, f, indent=1)
+    return finished
 
 
 if __name__ == "__main__":

@@ -85,14 +85,45 @@ def build_prefill_step(model: Model):
     return prefill_step
 
 
-def build_decode_step(model: Model):
+def build_decode_step(model: Model, *, jit: bool = True, donate: bool = True):
+    """Greedy one-token decode step.
+
+    Jitted with the KV cache donated (``donate_argnums``): the per-token
+    update writes the cache buffers in place instead of copying the whole
+    (L, B, Smax, ...) allocation every generated token — the difference
+    between O(1) and O(cache) memory traffic per step. Callers must treat
+    the passed-in cache as consumed and keep only the returned one.
+    ``cache_len`` may be a scalar (lockstep) or (B,) vector (continuous
+    batching with ragged per-sequence lengths).
+    """
     def decode_step(params, cache, tokens, cache_len):
         logits, new_cache = model.decode_step(params, cache, tokens, cache_len)
         # greedy next token (serving semantics)
         next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
         return next_tok, logits, new_cache
 
-    return decode_step
+    if not jit:
+        return decode_step
+    return jax.jit(decode_step, donate_argnums=(1,) if donate else ())
+
+
+def greedy_decode_tokens(model: Model, params, tokens, *, steps: int,
+                         max_len: int, cache_dtype=jnp.float32):
+    """Greedy-decode ``steps`` tokens from ``tokens`` (B,1) with a fresh
+    cache; returns the (B, steps) numpy array of sampled ids.
+
+    Shared oracle for the decode parity gates: the pallas-vs-naive
+    token-identical checks in tests/test_decode_consistency.py and
+    benchmarks/decode_bench.py both call this so the two gates cannot drift.
+    """
+    import numpy as np
+    cache = model.init_cache(tokens.shape[0], max_len, cache_dtype)
+    t, out = tokens, []
+    for i in range(steps):
+        logits, cache = model.decode_step(params, cache, t, jnp.int32(i))
+        t = jnp.argmax(logits[:, -1:, :], -1).astype(jnp.int32)
+        out.append(np.asarray(t))
+    return np.concatenate(out, 1)
 
 
 def cast_params(params, dtype):

@@ -74,7 +74,12 @@ def _group(q, n_kv):
 
 
 def naive_attention(q, k, v, *, causal: bool, q_offset=0, kv_len: Optional[jax.Array] = None):
-    """Oracle attention. q:(B,Sq,H,hd) k,v:(B,Sk,K,hd)."""
+    """Oracle attention. q:(B,Sq,H,hd) k,v:(B,Sk,K,hd).
+
+    ``kv_len`` may be a scalar or a per-sequence (B,) vector (ragged decode
+    under continuous batching); rows must keep kv_len >= 1 to stay
+    well-defined — a fully-masked row softmaxes to uniform, not zero.
+    """
     B, Sq, H, hd = q.shape
     K = k.shape[2]
     qg = _group(q, K)
@@ -87,9 +92,13 @@ def naive_attention(q, k, v, *, causal: bool, q_offset=0, kv_len: Optional[jax.A
     if causal:
         q_idx = jnp.arange(Sq) + q_offset
         mask = kv_idx[None, :] <= q_idx[:, None]
-    if kv_len is not None:
+    if kv_len is not None and jnp.ndim(kv_len) > 0:  # per-sequence lengths
+        mask = mask[None] & (kv_idx[None, None, :] < kv_len[:, None, None])
+    elif kv_len is not None:
         mask = mask & (kv_idx[None, :] < kv_len)
-    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v.astype(jnp.float32))
     return out.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
@@ -220,28 +229,61 @@ def init_gqa_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
-def gqa_decode(p, x, cache, cache_len, cfg, *, cross_kv=None):
-    """One-token decode. x: (B,1,d); cache k/v: (B,Smax,K,hd); cache_len: scalar."""
+def _decode_positions(cache_len, B):
+    """(B,1) rope positions from a scalar or per-sequence cache_len."""
+    if jnp.ndim(cache_len) == 0:
+        return jnp.full((B, 1), cache_len, jnp.int32)
+    return cache_len.astype(jnp.int32)[:, None]
+
+
+def _scatter_token(buf, new, cache_len):
+    """Write ``new`` (B,1,...) into ``buf`` (B,Smax,...) at seq position
+    ``cache_len`` — scalar (lockstep decode, one dynamic slice) or per-
+    sequence (B,) (continuous batching, one-hot masked select)."""
+    if jnp.ndim(cache_len) == 0:
+        return jax.lax.dynamic_update_slice_in_dim(
+            buf, new.astype(buf.dtype), cache_len, 1)
+    onehot = jnp.arange(buf.shape[1])[None] == cache_len[:, None]  # (B,Smax)
+    onehot = onehot.reshape(onehot.shape + (1,) * (buf.ndim - 2))
+    return jnp.where(onehot, new.astype(buf.dtype), buf)
+
+
+def gqa_decode(p, x, cache, cache_len, cfg, *, cross_kv=None, impl: str = "naive"):
+    """One-token decode. x: (B,1,d); cache k/v: (B,Smax,K,hd).
+
+    ``cache_len``: scalar (all sequences in lockstep) or (B,) int32 (ragged
+    continuous batching). ``impl``: ``naive`` materializes the (H, Smax)
+    score rows; ``pallas`` runs the fused single-query flash-decode kernel
+    that streams only cache_len-valid KV tiles once per GQA group.
+    """
     B = x.shape[0]
     hd = cfg.head_dim
     q = (x @ p["wq"]).reshape(B, 1, cfg.n_heads, hd)
     if cross_kv is not None:
         k, v = cross_kv
-        out = naive_attention(q, k, v, causal=False)
+        if impl == "pallas":
+            from repro.kernels import ops as kops
+            out = kops.decode_attention(q, k, v, k.shape[1])
+        else:
+            out = naive_attention(q, k, v, causal=False)
         new_cache = cache
     else:
         k_new = (x @ p["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
         v_new = (x @ p["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
         if cfg.pos_embedding == "rope":
-            pos = jnp.full((B, 1), cache_len, jnp.int32)
+            pos = _decode_positions(cache_len, B)
             q = apply_rope(q, pos, cfg.rope_theta)
             k_new = apply_rope(k_new, pos, cfg.rope_theta)
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), cache_len, 1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), cache_len, 1)
+        ck = _scatter_token(cache["k"], k_new, cache_len)
+        cv = _scatter_token(cache["v"], v_new, cache_len)
         ck = shard(ck, "batch", "kvseq", None, None)
         cv = shard(cv, "batch", "kvseq", None, None)
         new_cache = {"k": ck, "v": cv}
-        out = naive_attention(q, ck, cv, causal=False, kv_len=cache_len + 1)
+        if impl == "pallas":
+            from repro.kernels import ops as kops
+            out = kops.decode_attention(q, ck, cv, cache_len + 1)
+        else:
+            out = naive_attention(q, ck, cv, causal=False, kv_len=cache_len + 1)
     y = out.reshape(B, 1, cfg.n_heads * hd) @ p["wo"]
     return y, new_cache
 
@@ -294,22 +336,22 @@ def init_mla_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
     }
 
 
-def mla_decode(p, x, cache, cache_len, cfg):
+def mla_decode(p, x, cache, cache_len, cfg, *, impl: str = "naive"):
     """Absorbed-matrix MLA decode: attention runs in the latent space.
 
     scores = q_nope . W_UK^T . latent  +  q_rope . k_rope
     out    = (probs . latent) . W_UV -> wo
     The KV cache is only (kv_lora_rank + rope_dim) wide per position.
+    ``cache_len`` scalar or (B,); ``impl="pallas"`` routes the latent-space
+    attention through the fused single-query kernel (K=1, G=H).
     """
     B = x.shape[0]
     nope, v_dim, rope_d = cfg.qk_nope_head_dim, cfg.v_head_dim, cfg.qk_rope_head_dim
-    pos = jnp.full((B, 1), cache_len, jnp.int32)
+    pos = _decode_positions(cache_len, B)
     q_nope, q_rope, latent_new, k_rope_new = _mla_qkv(p, x, cfg, pos)
 
-    lat = jax.lax.dynamic_update_slice_in_dim(
-        cache["latent"], latent_new.astype(cache["latent"].dtype), cache_len, 1)
-    kr = jax.lax.dynamic_update_slice_in_dim(
-        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), cache_len, 1)
+    lat = _scatter_token(cache["latent"], latent_new, cache_len)
+    kr = _scatter_token(cache["k_rope"], k_rope_new, cache_len)
     lat = shard(lat, "batch", "kvseq", None)
     kr = shard(kr, "batch", "kvseq", None)
 
@@ -318,12 +360,23 @@ def mla_decode(p, x, cache, cache_len, cfg):
     # absorb W_UK into the query:  (B,1,H,nope) x (r,H,nope) -> (B,1,H,r)
     q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
     scale = 1.0 / math.sqrt(nope + rope_d)
-    s = (jnp.einsum("bqhr,bsr->bhqs", q_lat, lat.astype(jnp.float32))
-         + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32), kr.astype(jnp.float32))) * scale
-    kv_idx = jnp.arange(lat.shape[1])
-    s = jnp.where((kv_idx < cache_len + 1)[None, None, None], s, -1e30)
-    probs = jax.nn.softmax(s, axis=-1)
-    ctx = jnp.einsum("bhqs,bsr->bqhr", probs, lat.astype(jnp.float32))
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        ctx = kops.decode_attention_mla(
+            q_lat, q_rope.astype(jnp.float32), lat, kr, cache_len + 1,
+            scale=scale).astype(jnp.float32)
+    else:
+        s = (jnp.einsum("bqhr,bsr->bhqs", q_lat, lat.astype(jnp.float32))
+             + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32), kr.astype(jnp.float32))) * scale
+        kv_idx = jnp.arange(lat.shape[1])
+        kv_len = cache_len + 1
+        if jnp.ndim(kv_len) > 0:  # ragged continuous batch
+            valid = (kv_idx[None] < kv_len[:, None])[:, None, None]
+        else:
+            valid = (kv_idx < kv_len)[None, None, None]
+        s = jnp.where(valid, s, -1e30)
+        probs = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhqs,bsr->bqhr", probs, lat.astype(jnp.float32))
     out = jnp.einsum("bqhr,rhv->bqhv", ctx, w_uv.astype(jnp.float32)).astype(x.dtype)
     y = out.reshape(B, 1, cfg.n_heads * v_dim) @ p["wo"]
     return y, {"latent": lat, "k_rope": kr}

@@ -434,8 +434,15 @@ def init_cache_decoder(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
 
 def decode_step_decoder(params, cfg, cache, tokens, cache_len, *, impl="chunked",
                         moe_cf=1.25):
-    """One-token decode. tokens: (B,1) int32; cache_len: scalar int32."""
+    """One-token decode. tokens: (B,1) int32; cache_len: scalar or (B,) int32.
+
+    ``impl="pallas"`` selects the fused single-query flash-decode kernel for
+    every KV-cache attention in the stack; any other impl uses the naive
+    decode oracle (the prefill/train impls chunked/pallas only apply to full
+    sequence attention, so decode maps them onto {naive, pallas}).
+    """
     B = tokens.shape[0]
+    dimpl = "pallas" if impl == "pallas" else "naive"
     h = embed_tokens(params["embed"], tokens)
 
     if cfg.family == "ssm":
@@ -465,7 +472,8 @@ def decode_step_decoder(params, cfg, cache, tokens, cache_len, *, impl="chunked"
             glp, mst, skv = xs
             u = jnp.concatenate([hh, emb0], axis=-1) @ params["shared"]["w_in"]
             x = apply_norm(params["shared"]["ln1"], u, cfg.norm)
-            a, skv_new = gqa_decode(params["shared"]["attn"], x, skv, cache_len, cfg)
+            a, skv_new = gqa_decode(params["shared"]["attn"], x, skv, cache_len, cfg,
+                                    impl=dimpl)
             u = u + a
             u = u + apply_mlp(params["shared"]["mlp"],
                               apply_norm(params["shared"]["ln2"], u, cfg.norm), cfg.activation)
@@ -501,14 +509,15 @@ def decode_step_decoder(params, cfg, cache, tokens, cache_len, *, impl="chunked"
             def inner(c, xs2):
                 lp, lcache = xs2
                 x = apply_norm(lp["ln1"], c, cfg.norm)
-                a, lnew = gqa_decode(lp["attn"], x, lcache, cache_len, cfg)
+                a, lnew = gqa_decode(lp["attn"], x, lcache, cache_len, cfg, impl=dimpl)
                 c = c + a
                 c = c + apply_mlp(lp["mlp"], apply_norm(lp["ln2"], c, cfg.norm), cfg.activation)
                 return c, lnew
 
             hh, snew = jax.lax.scan(inner, hh, (slp, scache))
             x = apply_norm(clp["ln1"], hh, cfg.norm)
-            a, _ = gqa_decode(clp["attn"], x, None, cache_len, cfg, cross_kv=(ckv["k"], ckv["v"]))
+            a, _ = gqa_decode(clp["attn"], x, None, cache_len, cfg,
+                              cross_kv=(ckv["k"], ckv["v"]), impl=dimpl)
             hh = hh + jnp.tanh(clp["gate_attn"]) * a
             m = apply_mlp(clp["mlp"], apply_norm(clp["ln2"], hh, cfg.norm), cfg.activation)
             hh = hh + jnp.tanh(clp["gate_mlp"]) * m
@@ -528,9 +537,11 @@ def decode_step_decoder(params, cfg, cache, tokens, cache_len, *, impl="chunked"
                 lp, lcache = xs
                 x = apply_norm(lp["ln1"], hh, cfg.norm)
                 if cfg.use_mla:
-                    a, lnew = mla_decode(lp["attn"], x, lcache, cache_len, cfg)
+                    a, lnew = mla_decode(lp["attn"], x, lcache, cache_len, cfg,
+                                         impl=dimpl)
                 else:
-                    a, lnew = gqa_decode(lp["attn"], x, lcache, cache_len, cfg)
+                    a, lnew = gqa_decode(lp["attn"], x, lcache, cache_len, cfg,
+                                         impl=dimpl)
                 hh = hh + a
                 x = apply_norm(lp["ln2"], hh, cfg.norm)
                 if moe_layer:

@@ -58,3 +58,23 @@ def test_flash_attention_bf16():
     want = naive_attention(q, k, v, causal=True)
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), rtol=5e-2, atol=5e-2)
+
+
+def test_flash_attention_bf16_env_toggle(monkeypatch):
+    """REPRO_ATTN_BF16 reaches the Pallas kernels: bf16 dot inputs, f32
+    statistics — close to the exact path, resolved per call (no stale jit)."""
+    B, S, H, hd = 1, 32, 2, 16
+    q = jax.random.normal(KEY, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 7), (B, S, H, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 8), (B, S, H, hd))
+    monkeypatch.delenv("REPRO_ATTN_BF16", raising=False)
+    exact = np.asarray(ops.flash_attention(q, k, v, causal=True))
+    monkeypatch.setenv("REPRO_ATTN_BF16", "1")
+    lowp = np.asarray(ops.flash_attention(q, k, v, causal=True))
+    assert np.all(np.isfinite(lowp))
+    np.testing.assert_allclose(lowp, exact, rtol=3e-2, atol=3e-2)
+    assert np.abs(lowp - exact).max() > 0.0
+
+    # grads flow through the lowp backward kernels too
+    g = jax.grad(lambda q: ops.flash_attention(q, k, v, causal=True).sum())(q)
+    assert np.all(np.isfinite(np.asarray(g)))
