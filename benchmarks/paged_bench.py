@@ -1,0 +1,165 @@
+"""Paged-vs-contiguous KV cache benchmark under a mixed request trace.
+
+Runs the same mixed short/long request stream through the continuous-
+batching engine twice — ``kv_layout="contig"`` (per-slot (max_seq,) slabs)
+and ``kv_layout="paged"`` (block-pooled cache + block tables) — at equal
+batch size, and reports:
+
+  - tokens/sec for each layout (same jitted decode shape count, so the
+    comparison is honest per backend);
+  - peak KV bytes: the contiguous slab is fully resident by construction,
+    while the paged figure is the pool's high-water mark of blocks in use —
+    the quantity a block-granular allocator actually has to back. The
+    mixed trace is mostly short requests, exactly the traffic where slabs
+    over-provision (ISSUE acceptance: >= 2x reduction).
+
+The correctness gate is token parity: greedy decoding must produce
+identical streams per request uid under both layouts (and CI fails the job
+otherwise). Writes ``BENCH_paged.json``.
+
+Usage:
+  PYTHONPATH=src python benchmarks/paged_bench.py [--out BENCH_paged.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+LAYOUTS = ("contig", "paged")
+
+
+def _mixed_requests(rng, n_short: int, n_long: int):
+    """Mostly-short traffic with a long tail: the regime where per-slot
+    max_seq slabs over-provision hardest."""
+    from repro.launch.serve import Request
+    reqs = []
+    uid = 0
+    for _ in range(n_short):
+        p = int(rng.integers(6, 18))
+        reqs.append(Request(uid=uid, prompt=rng.integers(0, 64, p).astype(np.int32),
+                            max_new_tokens=int(rng.integers(4, 10))))
+        uid += 1
+    for _ in range(n_long):
+        reqs.append(Request(uid=uid,
+                            prompt=rng.integers(0, 64, 96).astype(np.int32),
+                            max_new_tokens=24))
+        uid += 1
+    rng.shuffle(reqs)
+    return reqs
+
+
+def bench_paged(arch: str = "llama3.2-1b", *, batch: int = 4,
+                max_seq: int = 256, block_size: int = 16,
+                impl: str = "naive", seed: int = 0):
+    """One paged-vs-contig cell; returns the records for both layouts."""
+    from repro.configs import get_config
+    from repro.launch.serve import ContinuousBatchingEngine
+    from repro.models import build_model
+
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg, impl=impl)
+    params = model.init(jax.random.PRNGKey(0))
+
+    results, tokens = [], {}
+    for layout in LAYOUTS:
+        rng = np.random.default_rng(seed)
+        reqs = _mixed_requests(rng, n_short=3 * batch - 2, n_long=2)
+        engine = ContinuousBatchingEngine(
+            model, params, max_batch=batch, max_seq=max_seq,
+            kv_layout=layout, block_size=block_size)
+        t0 = time.perf_counter()
+        finished = engine.run(reqs)
+        dt = time.perf_counter() - t0
+        tokens[layout] = {u: f.tokens for u, f in finished.items()}
+        stats = engine.stats()
+        rec = {
+            "bench": "paged_serve", "shape": arch, "impl": impl,
+            "kv_layout": layout, "slots": batch, "max_seq": max_seq,
+            "block_size": block_size, "requests": len(reqs),
+            "tokens": engine.tokens_out, "steps": engine.decode_steps,
+            "occupancy": stats["occupancy"],
+            "wall_s": round(dt, 4),
+            "tok_s": round(engine.tokens_out / max(dt, 1e-9), 1),
+            "peak_kv_bytes": engine.kv_bytes(peak=True),
+            "status": "ok",
+        }
+        if layout == "paged":
+            rec["pool"] = stats["pool"]
+        results.append(rec)
+
+    parity = tokens["contig"] == tokens["paged"]
+    contig_b = results[0]["peak_kv_bytes"]
+    paged_b = max(results[1]["peak_kv_bytes"], 1)
+    reduction = contig_b / paged_b
+    for rec in results:
+        rec["token_parity"] = parity
+        rec["kv_bytes_reduction"] = round(reduction, 2)
+        if not parity:
+            rec["status"] = "error: paged/contig token mismatch"
+    return results
+
+
+def run(fast: bool = True):
+    """Harness entry (benchmarks/run.py): yields (name, us, derived) rows;
+    raises after the good rows if the parity gate fails so a broken paged
+    path lands in the failure accounting."""
+    del fast
+    bad = []
+    for rec in bench_paged():
+        name = f"paged_{rec['shape']}_{rec['kv_layout']}"
+        yield (name, rec["wall_s"] * 1e6,
+               f"tok_s={rec['tok_s']} peak_kv_bytes={rec['peak_kv_bytes']} "
+               f"reduction={rec['kv_bytes_reduction']}x")
+        if rec["status"] != "ok":
+            bad.append(f"{name}: {rec['status']}")
+    if bad:
+        raise RuntimeError("paged bench failures: " + "; ".join(sorted(set(bad))))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--impl", default="naive", choices=("naive", "pallas"))
+    ap.add_argument("--out", default="BENCH_paged.json")
+    args = ap.parse_args()
+
+    results = bench_paged(args.arch, batch=args.batch, max_seq=args.max_seq,
+                          block_size=args.block_size, impl=args.impl)
+    print("name,us_per_call,derived")
+    for rec in results:
+        print(f"paged_{rec['shape']}_{rec['kv_layout']},"
+              f"{rec['wall_s'] * 1e6:.0f},"
+              f"tok_s={rec['tok_s']} peak_kv_bytes={rec['peak_kv_bytes']}")
+
+    reduction = results[0]["kv_bytes_reduction"]
+    parity = results[0]["token_parity"]
+    # memory gate: the paged layout must at least halve peak KV bytes on the
+    # mixed trace (ISSUE acceptance); parity is the hard correctness gate
+    payload = {
+        "backend": jax.default_backend(),
+        "interpret": jax.default_backend() != "tpu",
+        "token_parity": parity,
+        "kv_bytes_reduction": reduction,
+        "memory_gate_2x": bool(reduction >= 2.0),
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {args.out} (reduction={reduction}x parity={parity})",
+          file=sys.stderr)
+    return 0 if (parity and reduction >= 2.0) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

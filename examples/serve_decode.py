@@ -20,11 +20,18 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--attn-impl", default="auto",
                     choices=("auto", "naive", "pallas"))
+    ap.add_argument("--kv-layout", default="contig",
+                    choices=("contig", "paged"),
+                    help="contiguous per-slot slabs or block-pooled paged KV")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
     ap.add_argument("--lockstep", action="store_true")
     args = ap.parse_args()
     argv = ["--arch", args.arch, "--reduced", "--batch", str(args.batch),
             "--requests", str(args.requests), "--prompt-len", "32",
-            "--gen", str(args.gen), "--attn-impl", args.attn_impl]
+            "--gen", str(args.gen), "--attn-impl", args.attn_impl,
+            "--kv-layout", args.kv_layout,
+            "--temperature", str(args.temperature)]
     if args.lockstep:
         argv.append("--lockstep")
     S.main(argv)

@@ -1,12 +1,18 @@
 """Event sources the TrainSession reacts to.
 
-Two kinds, matching the paper's two migration triggers:
+Three kinds, matching the paper's migration triggers:
 
 - InterferenceTrace: synthetic co-tenant bursts (the ``--interference-trace``
   CLI flag). A burst multiplies the *observed* step latency the controller
   sees; how much of it a rung actually feels is scaled by that rung's
   ``interference_sensitivity`` — downgrading relinquishes the contended
   resource, so cheap rungs see a smaller multiplier (paper Fig. 4b / Table 3).
+- ThermalTrace (paper §3.3): sustained-load throttling with its own
+  hysteresis constants. Unlike a scripted burst it is *closed-loop*: heat
+  accumulates with the active rung's power draw (proxied by its
+  interference sensitivity), the throttle engages above ``trigger_temp``
+  and — crucially — releases only below ``release_temp`` < trigger, so the
+  slowdown persists until a downgrade actually sheds enough heat.
 - Device-loss events (FaultModel-sampled or scripted): hard interference that
   routes through SwanController.force_downgrade and forces a remesh.
 """
@@ -64,6 +70,86 @@ class InterferenceTrace:
 
     def to_json(self) -> List[dict]:
         return [dataclasses.asdict(b) for b in self.bursts]
+
+
+@dataclasses.dataclass
+class ThermalTrace:
+    """Closed-loop thermal throttling (paper §3.3).
+
+    A normalized die temperature integrates ``heat_rate * sensitivity``
+    (the active rung's power draw) against a constant ``cool_rate`` each
+    step. Hysteresis: the throttle engages when temperature crosses
+    ``trigger_temp`` and releases only once it has fallen below
+    ``release_temp`` — a downgraded rung whose heat generation drops under
+    ``cool_rate`` therefore *recovers* after a cooling interval, while a
+    rung that keeps burning stays throttled indefinitely. This is the
+    dynamic a step-scripted burst cannot express: the slowdown's duration
+    depends on what the controller migrates to.
+
+    Stateful: ``effective_slowdown`` advances the simulation one step per
+    call, in step order — exactly how TrainSession drives its trace.
+    """
+    heat_rate: float = 0.05     # temp gained per step at sensitivity 1.0
+    cool_rate: float = 0.02     # temp shed per step, always
+    slowdown: float = 2.5       # throttle multiplier at full sensitivity
+    trigger_temp: float = 1.0   # throttle engages at/above this
+    release_temp: float = 0.5   # ...and releases at/below this (hysteresis)
+    temp: float = dataclasses.field(default=0.0, init=False)
+    throttled: bool = dataclasses.field(default=False, init=False)
+    _last_step: int = dataclasses.field(default=-1, init=False)
+
+    def __post_init__(self):
+        if self.heat_rate <= 0 or self.cool_rate <= 0:
+            raise ValueError("heat_rate and cool_rate must be > 0")
+        if self.slowdown < 1.0:
+            raise ValueError(f"slowdown must be >= 1, got {self.slowdown}")
+        if not 0 <= self.release_temp < self.trigger_temp:
+            raise ValueError("need 0 <= release_temp < trigger_temp")
+
+    @classmethod
+    def parse(cls, spec: str) -> "ThermalTrace":
+        """Parse ``"heat:cool:slowdown"`` or
+        ``"heat:cool:slowdown:trigger:release"`` (the ``--thermal-trace``
+        flag), e.g. ``"0.05:0.02:2.5"``."""
+        fields = [f.strip() for f in spec.split(":")]
+        if len(fields) not in (3, 5):
+            raise ValueError(f"bad thermal spec {spec!r}; want "
+                             f"heat:cool:slowdown[:trigger:release]")
+        heat, cool, slow = (float(f) for f in fields[:3])
+        kw = {}
+        if len(fields) == 5:
+            kw = {"trigger_temp": float(fields[3]),
+                  "release_temp": float(fields[4])}
+        return cls(heat_rate=heat, cool_rate=cool, slowdown=slow, **kw)
+
+    def effective_slowdown(self, step: int, sensitivity: float) -> float:
+        """Advance to ``step`` under the active rung's power draw; return the
+        latency multiplier that rung observes.
+
+        The thermal state advances at most once per distinct ``step`` (the
+        first call's sensitivity is the power draw that heats the die), so
+        re-evaluating the same step for several candidate rungs — the
+        adaptive-vs-static curve pattern — reads the throttle without
+        secretly re-heating it."""
+        if step != self._last_step:
+            self._last_step = step
+            self.temp = max(0.0, self.temp
+                            + self.heat_rate * sensitivity - self.cool_rate)
+            if not self.throttled and self.temp >= self.trigger_temp:
+                self.throttled = True
+            elif self.throttled and self.temp <= self.release_temp:
+                self.throttled = False
+        if not self.throttled:
+            return 1.0
+        return 1.0 + (self.slowdown - 1.0) * sensitivity
+
+    def active(self, step: int) -> bool:
+        return self.throttled
+
+    def to_json(self) -> dict:
+        return {"heat_rate": self.heat_rate, "cool_rate": self.cool_rate,
+                "slowdown": self.slowdown, "trigger_temp": self.trigger_temp,
+                "release_temp": self.release_temp}
 
 
 @dataclasses.dataclass(frozen=True)

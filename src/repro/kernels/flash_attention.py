@@ -56,6 +56,15 @@ away, so a ragged continuous batch streams only the cache it actually has.
 The MLA variant runs in the latent space (k = [latent | k_rope], v = latent)
 via the same kernel with K=1, G=H and an explicit softmax scale.
 
+``flash_decode_paged`` is the paged-KV sibling: the cache lives in a
+``(num_blocks, block_size, K, hd)`` pool shared by every sequence and each
+sequence names its blocks via a ``(B, max_blocks_per_seq)`` int32 block
+table. The table rides scalar prefetch next to ``lengths``, so the KV
+BlockSpec index maps translate logical tile j -> physical block
+``table[b, j]`` before the DMA is issued — same grid, same VMEM carry, same
+clamp-and-predicate treatment of tiles past ``lengths[b]`` as the
+contiguous kernel, just one extra indirection in the index map.
+
 bf16 accumulation (``REPRO_ATTN_BF16`` / ``lowp=``): dot-product inputs drop
 to bf16 — halving the KV bytes the MXU pulls per tile — while online-softmax
 statistics and the output accumulator stay f32, matching the chunked path.
@@ -524,3 +533,83 @@ def flash_decode(q, k, v, lengths, *, scale: Optional[float] = None,
         interpret=interp,
         **_decode_grid_params(interp),
     )(lengths, q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# paged decode: KV in a block pool, indexed through a block table
+# ---------------------------------------------------------------------------
+
+
+def _decode_paged_kernel(len_ref, tbl_ref, *rest, **kw):
+    # the block table is consumed entirely by the BlockSpec index maps; the
+    # kernel body is the contiguous single-query kernel unchanged (online
+    # softmax over tiles, compute predicated past lengths[b])
+    del tbl_ref
+    _decode_kernel(len_ref, *rest, **kw)
+
+
+def flash_decode_paged(q, k_pool, v_pool, block_table, lengths, *,
+                       scale: Optional[float] = None,
+                       interpret: Optional[bool] = None,
+                       lowp: Optional[bool] = None):
+    """Single-query flash decode over a paged (block-pooled) KV cache.
+
+    q: (B, K, G, hd) — grouped query heads, as in ``flash_decode``.
+    k_pool: (num_blocks, block_size, K, hd)  v_pool: (..., hdv) — physical
+       KV blocks shared by all sequences (no batch dimension).
+    block_table: (B, T) int32 — logical block j of sequence b lives in
+       physical block ``block_table[b, j]``; rows may point unused tail
+       entries at any valid block (they are clamped and predicated away).
+    lengths: (B,) int32 — row b attends to virtual positions < lengths[b]
+       (position p lives at offset p % block_size of logical block
+       p // block_size); rows with length 0 produce zeros.
+
+    Grid is (B, K, T): the kernel tile IS the pool block, so each grid step
+    DMAs exactly one physical block, located by the scalar-prefetched table.
+    Tiles past ``lengths[b]`` clamp to the last live logical block (re-fetch
+    of a resident physical block, no dead DMA) and their compute is
+    predicated away — identical math to ``flash_decode`` on the contiguous
+    cache the table describes. Returns (B, K, G, hdv).
+    """
+    B, K, G, hd = q.shape
+    num_blocks, bs = k_pool.shape[0], k_pool.shape[1]
+    hdv = v_pool.shape[-1]
+    T = block_table.shape[1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(hd)
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+    table = jnp.clip(jnp.asarray(block_table, jnp.int32), 0, num_blocks - 1)
+    interp = resolve_interpret(interpret)
+
+    def q_index(b, kh, j, len_ref, tbl_ref):
+        return (b, kh, 0, 0)
+
+    def kv_index(b, kh, j, len_ref, tbl_ref):
+        # clamp dead tiles past lengths[b] to the last live logical block,
+        # then translate logical -> physical through the block table
+        j = jnp.minimum(j, jnp.maximum(pl.cdiv(len_ref[b], bs) - 1, 0))
+        return (tbl_ref[b, j], 0, kh, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, K, T),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), q_index),
+            pl.BlockSpec((1, bs, 1, hd), kv_index),
+            pl.BlockSpec((1, bs, 1, hdv), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hdv), q_index),
+        scratch_shapes=[
+            pltpu.VMEM((G, _LANES), jnp.float32),
+            pltpu.VMEM((G, _LANES), jnp.float32),
+            pltpu.VMEM((G, hdv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_decode_paged_kernel, block_k=bs, scale=scale,
+                          n_kv=T, lowp=attn_bf16(lowp)),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hdv), q.dtype),
+        interpret=interp,
+        **_decode_grid_params(interp),
+    )(lengths, table, q, k_pool, v_pool)

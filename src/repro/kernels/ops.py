@@ -17,7 +17,8 @@ import jax.numpy as jnp
 from repro.kernels import ref  # noqa: F401  (oracles re-exported for callers)
 from repro.kernels.backend import default_interpret as _interpret  # noqa: F401
 from repro.kernels.depthwise_conv import depthwise_conv as _dw
-from repro.kernels.flash_attention import flash_attention_mha, flash_decode
+from repro.kernels.flash_attention import (flash_attention_mha, flash_decode,
+                                           flash_decode_paged)
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 
 
@@ -87,3 +88,37 @@ def decode_attention_mla(q_lat, q_rope, latent, k_rope, lengths, *,
     kv = jnp.concatenate([latent, k_rope.astype(latent.dtype)], -1)[:, :, None]
     val = latent[:, :, None]
     return flash_decode(q, kv, val, lengths, scale=scale, block_k=block_k)
+
+
+def decode_attention_paged(q, k_pool, v_pool, block_table, lengths):
+    """Single-token GQA decode against a paged (block-pooled) KV cache.
+
+    q: (B, 1, H, hd); k_pool/v_pool: (num_blocks, block_size, K, hd[v])
+    shared physical blocks; block_table: (B, T) int32; lengths: (B,) or
+    scalar valid counts. Same grouped-query streaming as
+    ``decode_attention``, with the KV index maps going through the
+    scalar-prefetched block table.
+    """
+    B, _, H, hd = q.shape
+    K = k_pool.shape[2]
+    qg = q.reshape(B, K, H // K, hd)
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+    out = flash_decode_paged(qg, k_pool, v_pool, block_table, lengths)
+    return out.reshape(B, 1, H, v_pool.shape[-1])
+
+
+def decode_attention_mla_paged(q_lat, q_rope, latent_pool, k_rope_pool,
+                               block_table, lengths, *, scale: float):
+    """Absorbed-matrix MLA decode over paged latent pools.
+
+    latent_pool: (num_blocks, block_size, r); k_rope_pool: (..., rd).
+    Keys are [latent | k_rope] per block, values the latent itself — the
+    paged kernel runs with K=1, G=H exactly like the contiguous MLA path.
+    """
+    B = q_lat.shape[0]
+    q = jnp.concatenate([q_lat, q_rope], -1)  # (B, K=1, G=H, r+rd)
+    kv = jnp.concatenate(
+        [latent_pool, k_rope_pool.astype(latent_pool.dtype)], -1)[:, :, None]
+    val = latent_pool[:, :, None]
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+    return flash_decode_paged(q, kv, val, block_table, lengths, scale=scale)

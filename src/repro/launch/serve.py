@@ -17,13 +17,32 @@ Mechanics per decode step:
     frozen cache_len keeps the math well-defined and their KV tiles are
     skipped by the Pallas decode kernel's length-clamped index maps.
 
+KV layouts (``--kv-layout``):
+  - ``contig`` reserves a (max_batch, max_seq) slab per layer — every slot
+    pays for a full-length cache whether or not it uses it;
+  - ``paged`` stores KV in fixed-size blocks from a shared pool
+    (``repro.paging``): admission allocates just the blocks the prompt
+    needs and splices prefill KV block-by-block with one donated scatter,
+    decode allocates on block boundaries, and retirement returns blocks to
+    the pool — peak KV memory tracks *live tokens*, not slots x max_seq.
+    The decode step routes each sequence through its (B, T) block table
+    (scalar-prefetched by the paged flash-decode kernel).
+
+Sampling: greedy by default; ``--temperature/--top-k`` switch the emitted
+stream to seeded sampling with a per-request PRNG key (a request's stream
+is independent of how it was batched). Parity gates keep using greedy.
+
+``--bucket-prompts`` rounds admission prefill lengths up to power-of-two
+buckets so the prefill jit cache stops growing per unique prompt length.
+
 ``--attn-impl pallas`` routes decode attention through the fused
-single-query flash-decode kernel (kernels/flash_attention.flash_decode);
-``auto`` consults kernels/backend.auto_decode_impl (cache length x backend).
+single-query flash-decode kernel (kernels/flash_attention.flash_decode /
+flash_decode_paged); ``auto`` consults kernels/backend.auto_decode_impl
+(cache length x backend).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
-      --batch 4 --requests 12 --prompt-len 32 --gen 16
+      --batch 4 --requests 12 --prompt-len 32 --gen 16 [--kv-layout paged]
 """
 from __future__ import annotations
 
@@ -40,8 +59,10 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.kernels.backend import auto_decode_impl
-from repro.launch.steps import build_decode_step
+from repro.launch.steps import (build_decode_step, build_paged_decode_step,
+                                build_sampler)
 from repro.models.registry import build_model
+from repro.paging import PagedKVCache
 
 # families whose decode state is a slotted (L, B, Smax, ...) KV cache the
 # engine knows how to splice; SSM/hybrid state and encoder-decoder cross
@@ -68,19 +89,27 @@ class ContinuousBatchingEngine:
     """Slot-based continuous batching over a model's KV-cache decode path."""
 
     def __init__(self, model, params, *, max_batch: int, max_seq: int,
-                 eos_id: Optional[int] = None, cache_dtype=jnp.float32):
+                 eos_id: Optional[int] = None, cache_dtype=jnp.float32,
+                 kv_layout: str = "contig", block_size: int = 16,
+                 num_blocks: Optional[int] = None,
+                 temperature: float = 0.0, top_k: int = 0,
+                 sample_seed: int = 0, bucket_prompts: bool = False):
         cfg = model.cfg
         if cfg.family not in ENGINE_FAMILIES:
             raise ValueError(
                 f"continuous batching needs a slotted KV cache; family "
                 f"{cfg.family!r} is served by the legacy lockstep path")
+        if kv_layout not in ("contig", "paged"):
+            raise ValueError(f"kv_layout must be contig|paged, got {kv_layout!r}")
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.eos_id = eos_id
+        self.kv_layout = kv_layout
+        self.block_size = block_size
+        self.bucket_prompts = bucket_prompts
 
-        self.cache = model.init_cache(max_batch, max_seq, cache_dtype)
         self.cache_len = np.zeros(max_batch, np.int32)
         self.tokens = np.zeros((max_batch, 1), np.int32)
         self.slot_uid: List[Optional[int]] = [None] * max_batch
@@ -93,18 +122,69 @@ class ContinuousBatchingEngine:
         self.tokens_out = 0
         self._active_slot_steps = 0
         self._uid_prompt_len: Dict[int, int] = {}
+        self.prefill_lengths: Dict[int, int] = {}  # padded length -> count
 
-        self._decode = build_decode_step(model)  # jitted, cache donated
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self._sampler = None
+        if self.temperature > 0.0:
+            self._sampler = build_sampler(self.temperature, self.top_k)
+            base = jax.random.PRNGKey(sample_seed)
+            # one jitted dispatch per step for the whole batch of keys, not a
+            # host-side fold_in pair per slot
+            self._keys = jax.jit(jax.vmap(
+                lambda u, i: jax.random.fold_in(jax.random.fold_in(base, u), i)))
+
         self._prefill = jax.jit(model.prefill)  # one compile per prompt length
 
-        def splice(cache, pcache, slot):
-            def one(buf, pc):
-                start = (jnp.int32(0), slot) + (jnp.int32(0),) * (buf.ndim - 2)
-                return jax.lax.dynamic_update_slice(buf, pc.astype(buf.dtype), start)
+        if kv_layout == "paged":
+            # virtual capacity per sequence: T blocks; defaults provision the
+            # contiguous equivalent so paged-vs-contig is a layout change, not
+            # a capacity change — benchmarks report *peak blocks in use*
+            blocks_per_seq = -(-max_seq // block_size)
+            if num_blocks is None:
+                num_blocks = max_batch * blocks_per_seq + 1  # +1 null block
+            self.kv = PagedKVCache(num_blocks, block_size, max_batch,
+                                   blocks_per_seq)
+            # admission control: worst-case blocks per resident request, so
+            # allocate-on-boundary can never exhaust the pool mid-decode
+            # (reservation is accounting only — peak_blocks_in_use still
+            # reports blocks actually allocated)
+            self._reserved: Dict[int, int] = {}
+            self.cache = model.init_paged_cache(num_blocks, block_size,
+                                                cache_dtype)
+            # jitted, cache donated; sampling mode reads logits, not argmax
+            self._decode = build_paged_decode_step(
+                model, greedy=self._sampler is None)
 
-            return jax.tree_util.tree_map(one, cache, pcache)
+            def paged_splice(cache, pcache, phys):
+                n = phys.shape[0]
 
-        self._splice = jax.jit(splice, donate_argnums=(0,))
+                def one(pool, pc):
+                    # pool: (L, NB, bs, ...); pc: (L, 1, Lp, ...), Lp >= n*bs
+                    L = pc.shape[0]
+                    blocks = pc[:, 0, :n * block_size].reshape(
+                        (L, n, block_size) + pc.shape[3:])
+                    return pool.at[:, phys].set(blocks.astype(pool.dtype))
+
+                return jax.tree_util.tree_map(one, cache, pcache)
+
+            self._splice_paged = jax.jit(paged_splice, donate_argnums=(0,))
+        else:
+            self.kv = None
+            self.cache = model.init_cache(max_batch, max_seq, cache_dtype)
+            # jitted, cache donated; sampling mode reads logits, not argmax
+            self._decode = build_decode_step(model,
+                                             greedy=self._sampler is None)
+
+            def splice(cache, pcache, slot):
+                def one(buf, pc):
+                    start = (jnp.int32(0), slot) + (jnp.int32(0),) * (buf.ndim - 2)
+                    return jax.lax.dynamic_update_slice(buf, pc.astype(buf.dtype), start)
+
+                return jax.tree_util.tree_map(one, cache, pcache)
+
+            self._splice = jax.jit(splice, donate_argnums=(0,))
 
     # -- request lifecycle -------------------------------------------------
 
@@ -112,14 +192,65 @@ class ContinuousBatchingEngine:
         if len(req.prompt) >= self.max_seq:
             raise ValueError(f"prompt {req.uid} ({len(req.prompt)} tokens) "
                              f"does not fit max_seq={self.max_seq}")
+        if self.kv is not None and \
+                self._worst_blocks(req) > self.kv.pool.num_usable:
+            raise ValueError(
+                f"request {req.uid} ({len(req.prompt)} prompt + "
+                f"{req.max_new_tokens} budget) can never be resident: pool "
+                f"has {self.kv.pool.num_usable} blocks of {self.block_size}")
         self.queue.append(req)
+
+    def _worst_blocks(self, req: Request) -> int:
+        """Blocks the request could ever own: prompt plus generation budget,
+        capped by the cache-capacity retirement rule."""
+        worst = min(len(req.prompt) + req.max_new_tokens, self.max_seq)
+        return self.kv.pool.blocks_for(worst)
+
+    def _prefill_len(self, P: int) -> int:
+        """Admission prefill length: the true prompt length, rounded up to a
+        block multiple under the paged layout (so KV splices whole blocks)
+        and to the next power of two under ``bucket_prompts`` (so the
+        prefill jit cache is bounded by log2(max_seq) entries)."""
+        L = P
+        if self.bucket_prompts:
+            L = 1 << (max(L, 1) - 1).bit_length()
+        if self.kv is not None:
+            bs = self.block_size
+            L = -(-L // bs) * bs
+            return min(L, self.kv.max_blocks_per_seq * bs)
+        return min(L, self.max_seq)
+
+    def _pick_token(self, logits_row, uid: int, index: int) -> int:
+        """logits_row: (V,). Greedy unless a sampler is configured.
+
+        Sampling keys are a pure function of (seed, uid, index), so a
+        request's sampled stream is independent of slot placement and batch
+        composition."""
+        if self._sampler is None:
+            return int(jnp.argmax(logits_row))
+        key = self._keys(jnp.asarray([uid], jnp.int32),
+                         jnp.asarray([index], jnp.int32))
+        return int(self._sampler(logits_row[None], key)[0])
 
     def _admit(self, slot: int, req: Request) -> None:
         P = len(req.prompt)
-        logits, pcache = self._prefill(
-            self.params, {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]})
-        self.cache = self._splice(self.cache, pcache, jnp.int32(slot))
-        first = int(jnp.argmax(logits[0, -1]))
+        Lp = self._prefill_len(P)
+        self.prefill_lengths[Lp] = self.prefill_lengths.get(Lp, 0) + 1
+        batch = {"tokens": jnp.asarray(np.pad(req.prompt, (0, Lp - P)),
+                                       jnp.int32)[None]}
+        if Lp != P:
+            # causal attention keeps every position < P unaffected by the
+            # right-padding; logits must come from the true last token
+            batch["last_pos"] = jnp.int32(P - 1)
+        logits, pcache = self._prefill(self.params, batch)
+        if self.kv is not None:
+            self._reserved[slot] = self._worst_blocks(req)
+            blocks = self.kv.admit(slot, req.uid, P)
+            self.cache = self._splice_paged(
+                self.cache, pcache, jnp.asarray(blocks, jnp.int32))
+        else:
+            self.cache = self._splice(self.cache, pcache, jnp.int32(slot))
+        first = self._pick_token(logits[0, -1], req.uid, 0)
         self.slot_uid[slot] = req.uid
         self.slot_budget[slot] = req.max_new_tokens
         self.cache_len[slot] = P
@@ -145,6 +276,11 @@ class ContinuousBatchingEngine:
             uid=uid, tokens=list(self.generated[slot]), reason=reason,
             prompt_len=self._uid_prompt_len.pop(uid))
         self.slot_uid[slot] = None
+        if self.kv is not None:
+            # blocks go back to the pool; the slot's table row resets to the
+            # null block so its masked idle-slot writes stay harmless
+            self.kv.release(slot)
+            self._reserved.pop(slot, None)
         # cache_len stays frozen: the stale KV keeps idle-slot math
         # well-defined and is overwritten by the next admission's splice
 
@@ -155,6 +291,15 @@ class ContinuousBatchingEngine:
             if not self.queue:
                 return
             if self.slot_uid[slot] is None:
+                if self.kv is not None:
+                    # reserve the head request's worst case against every
+                    # resident's: admission rejects under pool pressure
+                    # (FIFO, retried next step) so allocate-on-boundary can
+                    # never corrupt a live sequence mid-decode
+                    need = self._worst_blocks(self.queue[0])
+                    if sum(self._reserved.values()) + need > \
+                            self.kv.pool.num_usable:
+                        return
                 self._admit(slot, self.queue.popleft())
 
     def step(self) -> List[Tuple[int, int]]:
@@ -166,10 +311,25 @@ class ContinuousBatchingEngine:
         active = [s for s in range(self.max_batch) if self.slot_uid[s] is not None]
         if not active:
             return []
-        next_tok, _, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self.tokens),
-            jnp.asarray(self.cache_len))
-        next_np = np.asarray(next_tok)
+        if self.kv is not None:
+            for slot in active:  # allocate-on-boundary for this step's write
+                self.kv.append(slot, int(self.cache_len[slot]))
+            next_tok, logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(self.tokens),
+                jnp.asarray(self.cache_len), jnp.asarray(self.kv.tables))
+        else:
+            next_tok, logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(self.tokens),
+                jnp.asarray(self.cache_len))
+        if self._sampler is None:
+            next_np = np.asarray(next_tok)
+        else:
+            uids = np.asarray([self.slot_uid[s] if self.slot_uid[s] is not None
+                               else 0 for s in range(self.max_batch)], np.int32)
+            idxs = np.asarray([len(self.generated[s])
+                               for s in range(self.max_batch)], np.int32)
+            keys = self._keys(jnp.asarray(uids), jnp.asarray(idxs))
+            next_np = np.asarray(self._sampler(logits[:, -1], keys))[:, None]
         self.decode_steps += 1
         self._active_slot_steps += len(active)
         emitted = []
@@ -198,6 +358,42 @@ class ContinuousBatchingEngine:
         if not self.decode_steps:
             return 0.0
         return self._active_slot_steps / (self.decode_steps * self.max_batch)
+
+    def kv_bytes(self, *, peak: bool = False) -> int:
+        """KV-cache memory footprint in bytes.
+
+        ``contig``: the whole (max_batch, max_seq) slab tree — allocated up
+        front whatever the traffic. ``paged``: pool bytes scaled to blocks in
+        use (``peak`` gives the high-water mark) — what a block-granular
+        allocator would actually have had to back.
+        """
+        total = sum(a.size * a.dtype.itemsize
+                    for a in jax.tree_util.tree_leaves(self.cache))
+        if self.kv is None:
+            return total
+        blocks = self.kv.pool.peak_blocks_in_use if peak \
+            else self.kv.pool.blocks_in_use
+        return int(total * blocks / self.kv.pool.num_blocks)
+
+    def stats(self) -> Dict:
+        """Engine-level stats: occupancy, prefill buckets, pool accounting."""
+        out = {
+            "decode_steps": self.decode_steps,
+            "tokens_out": self.tokens_out,
+            "occupancy": round(self.occupancy, 4),
+            "kv_layout": self.kv_layout,
+            "prefill_buckets": {str(k): v for k, v in
+                                sorted(self.prefill_lengths.items())},
+            "prefill_compiles": len(self.prefill_lengths),
+            "kv_bytes": self.kv_bytes(),
+        }
+        if self.kv is not None:
+            live = {self.slot_uid[s]: int(self.cache_len[s])
+                    for s in range(self.max_batch)
+                    if self.slot_uid[s] is not None}
+            out["pool"] = self.kv.stats(live)
+            out["peak_kv_bytes"] = self.kv_bytes(peak=True)
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -283,6 +479,23 @@ def main(argv=None):
                     choices=("auto", "naive", "pallas"),
                     help="decode attention path; auto resolves via "
                          "kernels/backend.auto_decode_impl")
+    ap.add_argument("--kv-layout", default="contig",
+                    choices=("contig", "paged"),
+                    help="KV cache layout: contiguous per-slot slabs, or "
+                         "block-pooled paged cache (repro.paging)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged layout: token positions per KV block")
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="paged layout: physical blocks in the pool "
+                         "(default: contiguous-equivalent capacity)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k filter for sampling (0 = full vocab)")
+    ap.add_argument("--sample-seed", type=int, default=0)
+    ap.add_argument("--bucket-prompts", action="store_true",
+                    help="round admission prefill lengths up to power-of-two "
+                         "buckets (bounds prefill jit-cache growth)")
     ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--lockstep", action="store_true",
                     help="legacy fixed-batch loop (forced for SSM/hybrid/"
@@ -329,16 +542,25 @@ def main(argv=None):
     n_req = args.requests or 3 * args.batch
     reqs = _synthetic_requests(rng, n_req, args.prompt_len, args.gen,
                                cfg.vocab_size)
-    engine = ContinuousBatchingEngine(model, params, max_batch=args.batch,
-                                      max_seq=max_seq, eos_id=args.eos_id)
+    engine = ContinuousBatchingEngine(
+        model, params, max_batch=args.batch, max_seq=max_seq,
+        eos_id=args.eos_id, kv_layout=args.kv_layout,
+        block_size=args.block_size, num_blocks=args.kv_blocks,
+        temperature=args.temperature, top_k=args.top_k,
+        sample_seed=args.sample_seed, bucket_prompts=args.bucket_prompts)
     t0 = time.time()
     finished = engine.run(reqs)
     dt = time.time() - t0
     tok_s = engine.tokens_out / max(dt, 1e-9)
-    print(f"arch={cfg.name} mode=continuous impl={impl} slots={args.batch} "
-          f"requests={n_req} tokens={engine.tokens_out} "
+    print(f"arch={cfg.name} mode=continuous impl={impl} kv={args.kv_layout} "
+          f"slots={args.batch} requests={n_req} tokens={engine.tokens_out} "
           f"steps={engine.decode_steps} occupancy={engine.occupancy:.2f} "
           f"wall={dt*1e3:.0f}ms ({tok_s:.1f} tok/s)")
+    if args.kv_layout == "paged":
+        pool = engine.stats()["pool"]
+        print(f"pool: {pool['peak_blocks_in_use']}/{pool['num_blocks']} peak "
+              f"blocks, peak KV {engine.kv_bytes(peak=True)/1e6:.2f}MB "
+              f"(contig-equivalent slab would be fully resident)")
     sample = finished[0].tokens[:12] if 0 in finished else []
     print("sample uid=0:", sample)
     if args.json_out:
@@ -347,6 +569,7 @@ def main(argv=None):
             "requests": n_req, "tokens": engine.tokens_out,
             "steps": engine.decode_steps, "occupancy": round(engine.occupancy, 4),
             "wall_s": round(dt, 4), "tok_s": round(tok_s, 2),
+            "stats": engine.stats(),
             "finished": {str(u): {"reason": f.reason, "n_tokens": len(f.tokens),
                                   "prompt_len": f.prompt_len}
                          for u, f in finished.items()},

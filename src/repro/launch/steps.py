@@ -85,8 +85,9 @@ def build_prefill_step(model: Model):
     return prefill_step
 
 
-def build_decode_step(model: Model, *, jit: bool = True, donate: bool = True):
-    """Greedy one-token decode step.
+def build_decode_step(model: Model, *, jit: bool = True, donate: bool = True,
+                      greedy: bool = True):
+    """One-token decode step.
 
     Jitted with the KV cache donated (``donate_argnums``): the per-token
     update writes the cache buffers in place instead of copying the whole
@@ -94,17 +95,69 @@ def build_decode_step(model: Model, *, jit: bool = True, donate: bool = True):
     between O(1) and O(cache) memory traffic per step. Callers must treat
     the passed-in cache as consumed and keep only the returned one.
     ``cache_len`` may be a scalar (lockstep) or (B,) vector (continuous
-    batching with ragged per-sequence lengths).
+    batching with ragged per-sequence lengths). ``greedy=False`` skips the
+    argmax (its slot in the return triple is None) for callers that sample
+    from the logits instead — no point computing and transferring a
+    full-vocab argmax that is always discarded.
     """
     def decode_step(params, cache, tokens, cache_len):
         logits, new_cache = model.decode_step(params, cache, tokens, cache_len)
         # greedy next token (serving semantics)
-        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None] \
+            if greedy else None
         return next_tok, logits, new_cache
 
     if not jit:
         return decode_step
     return jax.jit(decode_step, donate_argnums=(1,) if donate else ())
+
+
+def build_paged_decode_step(model: Model, *, jit: bool = True,
+                            donate: bool = True, greedy: bool = True):
+    """One-token decode step over a paged KV cache.
+
+    Same contract as :func:`build_decode_step` (pools donated, per-token
+    update in place, ``greedy=False`` skips the argmax) with one extra
+    argument: the (B, T) int32 block table routing each sequence's virtual
+    cache positions to physical pool blocks. The table shape is fixed by
+    the engine, so a single compile serves every mix of resident sequences.
+    """
+    if model.paged_decode_step is None:
+        raise ValueError(f"family {model.cfg.family!r} has no paged decode path")
+
+    def decode_step(params, cache, tokens, cache_len, block_table):
+        logits, new_cache = model.paged_decode_step(params, cache, tokens,
+                                                    cache_len, block_table)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None] \
+            if greedy else None
+        return next_tok, logits, new_cache
+
+    if not jit:
+        return decode_step
+    return jax.jit(decode_step, donate_argnums=(1,) if donate else ())
+
+
+def build_sampler(temperature: float, top_k: int = 0, *, jit: bool = True):
+    """Returns f(logits (B, V), keys (B, 2) uint32) -> (B,) sampled int32 ids.
+
+    Temperature scales the logits; ``top_k > 0`` masks everything below the
+    k-th logit before sampling. Keys are per-sequence PRNG keys (one row per
+    slot) so sampling stays independent of batch composition — the serve
+    engine derives them per request uid and generation index, which makes a
+    request's sampled stream identical however it was batched.
+    """
+    if temperature <= 0.0:
+        raise ValueError("build_sampler needs temperature > 0; greedy "
+                         "decoding is the decode step's argmax")
+
+    def sample(logits, keys):
+        lg = logits.astype(jnp.float32) / temperature
+        if top_k:
+            kth = jax.lax.top_k(lg, top_k)[0][:, -1:]
+            lg = jnp.where(lg < kth, -jnp.inf, lg)
+        return jax.vmap(jax.random.categorical)(keys, lg).astype(jnp.int32)
+
+    return jax.jit(sample) if jit else sample
 
 
 def greedy_decode_tokens(model: Model, params, tokens, *, steps: int,

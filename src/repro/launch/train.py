@@ -5,9 +5,10 @@ compression -> checkpoint manager, then hands the loop to the engine. With
 ``--adaptive`` the session runs a Rung downgrade ladder under Swan's
 controller and migrates in place when interference appears;
 ``--interference-trace`` injects synthetic co-tenant bursts
-(``start:stop:slowdown[,...]``) so the adaptive path can be exercised on a
-quiet machine. ``--arch`` accepts any registry config; use reduced configs +
-small shapes on CPU.
+(``start:stop:slowdown[,...]``) and ``--thermal-trace`` closed-loop thermal
+throttling (``heat:cool:slowdown[:trigger:release]``, paper §3.3) so the
+adaptive path can be exercised on a quiet machine. ``--arch`` accepts any
+registry config; use reduced configs + small shapes on CPU.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --reduced \
@@ -25,7 +26,7 @@ import numpy as np
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config
 from repro.data.pipeline import synthetic_cnn_batch, synthetic_lm_batch
-from repro.engine.events import InterferenceTrace
+from repro.engine.events import InterferenceTrace, ThermalTrace
 from repro.engine.rungs import Rung, default_rung_ladder
 from repro.engine.session import TrainSession
 from repro.kernels.backend import auto_attn_impl
@@ -75,6 +76,11 @@ def main(argv=None):
                          "controller instead of one static step")
     ap.add_argument("--interference-trace", default=None,
                     help="synthetic co-tenant bursts, e.g. '40:80:2.5,120:140:3'")
+    ap.add_argument("--thermal-trace", default=None,
+                    help="closed-loop thermal throttling (paper §3.3): "
+                         "'heat:cool:slowdown[:trigger:release]', e.g. "
+                         "'0.05:0.02:2.5'; mutually exclusive with "
+                         "--interference-trace")
     ap.add_argument("--upgrade-patience", type=int, default=5)
     ap.add_argument("--timeline-out", default=None,
                     help="write the migration timeline JSON here")
@@ -99,8 +105,13 @@ def main(argv=None):
     else:
         rungs = [Rung(name="static", microbatch=args.microbatch,
                       attn_impl=impl)]
+    if args.interference_trace and args.thermal_trace:
+        raise SystemExit("--interference-trace and --thermal-trace are "
+                         "mutually exclusive (one trace drives the monitor)")
     trace = InterferenceTrace.parse(args.interference_trace) \
         if args.interference_trace else None
+    if args.thermal_trace:
+        trace = ThermalTrace.parse(args.thermal_trace)
 
     mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     state = None

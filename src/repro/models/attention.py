@@ -229,6 +229,19 @@ def init_gqa_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def init_gqa_pool(cfg, num_blocks: int, block_size: int, dtype=jnp.bfloat16):
+    """Paged layout: KV blocks shared by all sequences, no batch dim."""
+    shape = (num_blocks, block_size, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_mla_pool(cfg, num_blocks: int, block_size: int, dtype=jnp.bfloat16):
+    return {
+        "latent": jnp.zeros((num_blocks, block_size, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((num_blocks, block_size, cfg.qk_rope_head_dim), dtype),
+    }
+
+
 def _decode_positions(cache_len, B):
     """(B,1) rope positions from a scalar or per-sequence cache_len."""
     if jnp.ndim(cache_len) == 0:
@@ -246,6 +259,21 @@ def _scatter_token(buf, new, cache_len):
     onehot = jnp.arange(buf.shape[1])[None] == cache_len[:, None]  # (B,Smax)
     onehot = onehot.reshape(onehot.shape + (1,) * (buf.ndim - 2))
     return jnp.where(onehot, new.astype(buf.dtype), buf)
+
+
+def _scatter_token_paged(pool, new, cache_len, block_table):
+    """Write ``new`` (B,1,...) into a block pool (num_blocks, block_size, ...)
+    at virtual position ``cache_len`` of each sequence, routed through its
+    block-table row. Idle serving slots' rows point at the null block, so
+    their masked-garbage writes never touch a live sequence's cache."""
+    bs = pool.shape[1]
+    B = new.shape[0]
+    cl = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (B,))
+    blk = jnp.clip(cl // bs, 0, block_table.shape[1] - 1)
+    phys = jnp.take_along_axis(jnp.asarray(block_table, jnp.int32),
+                               blk[:, None], 1)[:, 0]
+    phys = jnp.clip(phys, 0, pool.shape[0] - 1)
+    return pool.at[phys, cl % bs].set(new[:, 0].astype(pool.dtype))
 
 
 def gqa_decode(p, x, cache, cache_len, cfg, *, cross_kv=None, impl: str = "naive"):
@@ -284,6 +312,43 @@ def gqa_decode(p, x, cache, cache_len, cfg, *, cross_kv=None, impl: str = "naive
             out = kops.decode_attention(q, ck, cv, cache_len + 1)
         else:
             out = naive_attention(q, ck, cv, causal=False, kv_len=cache_len + 1)
+    y = out.reshape(B, 1, cfg.n_heads * hd) @ p["wo"]
+    return y, new_cache
+
+
+def gqa_decode_paged(p, x, cache, cache_len, block_table, cfg, *,
+                     impl: str = "naive"):
+    """One-token GQA decode over a paged KV cache.
+
+    cache: {"k","v"} pools of shape (num_blocks, block_size, K, hd) shared by
+    every sequence; ``block_table`` (B, T) int32 names each sequence's
+    blocks. Math is identical to :func:`gqa_decode` on the contiguous cache
+    the table describes: scatter the new token's KV at virtual position
+    ``cache_len``, then attend over positions < cache_len + 1. ``naive``
+    gathers the contiguous view through the table (the oracle); ``pallas``
+    streams physical blocks directly via the block-table flash-decode kernel.
+    """
+    from repro.paging import gather_paged_kv
+
+    B = x.shape[0]
+    hd = cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, 1, cfg.n_heads, hd)
+    k_new = (x @ p["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
+    v_new = (x @ p["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
+    if cfg.pos_embedding == "rope":
+        pos = _decode_positions(cache_len, B)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k_new = apply_rope(k_new, pos, cfg.rope_theta)
+    ck = _scatter_token_paged(cache["k"], k_new, cache_len, block_table)
+    cv = _scatter_token_paged(cache["v"], v_new, cache_len, block_table)
+    new_cache = {"k": ck, "v": cv}
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.decode_attention_paged(q, ck, cv, block_table, cache_len + 1)
+    else:
+        out = naive_attention(q, gather_paged_kv(ck, block_table),
+                              gather_paged_kv(cv, block_table),
+                              causal=False, kv_len=cache_len + 1)
     y = out.reshape(B, 1, cfg.n_heads * hd) @ p["wo"]
     return y, new_cache
 
@@ -336,6 +401,34 @@ def init_mla_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
     }
 
 
+def _mla_naive_latent_ctx(q_lat, q_rope, lat, kr, kv_len, scale):
+    """Latent-space attention oracle shared by the contiguous and paged
+    decode paths: scores = q_lat . latent + q_rope . k_rope, values = latent.
+    Returns the (B, 1, H, r) context."""
+    s = (jnp.einsum("bqhr,bsr->bhqs", q_lat, lat.astype(jnp.float32))
+         + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                      kr.astype(jnp.float32))) * scale
+    kv_idx = jnp.arange(lat.shape[1])
+    if jnp.ndim(kv_len) > 0:  # ragged continuous batch
+        valid = (kv_idx[None] < kv_len[:, None])[:, None, None]
+    else:
+        valid = (kv_idx < kv_len)[None, None, None]
+    s = jnp.where(valid, s, -1e30)
+    probs = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqs,bsr->bqhr", probs, lat.astype(jnp.float32))
+
+
+def _mla_absorbed_q(p, q_nope, cfg):
+    """Absorb W_UK into the query; returns (q_lat, w_uv)."""
+    nope, v_dim = cfg.qk_nope_head_dim, cfg.v_head_dim
+    wkv_b = p["wkv_b"].reshape(cfg.kv_lora_rank, cfg.n_heads, nope + v_dim)
+    w_uk, w_uv = wkv_b[..., :nope], wkv_b[..., nope:]
+    # (B,1,H,nope) x (r,H,nope) -> (B,1,H,r)
+    q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    return q_lat, w_uv
+
+
 def mla_decode(p, x, cache, cache_len, cfg, *, impl: str = "naive"):
     """Absorbed-matrix MLA decode: attention runs in the latent space.
 
@@ -355,10 +448,7 @@ def mla_decode(p, x, cache, cache_len, cfg, *, impl: str = "naive"):
     lat = shard(lat, "batch", "kvseq", None)
     kr = shard(kr, "batch", "kvseq", None)
 
-    wkv_b = p["wkv_b"].reshape(cfg.kv_lora_rank, cfg.n_heads, nope + v_dim)
-    w_uk, w_uv = wkv_b[..., :nope], wkv_b[..., nope:]
-    # absorb W_UK into the query:  (B,1,H,nope) x (r,H,nope) -> (B,1,H,r)
-    q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
+    q_lat, w_uv = _mla_absorbed_q(p, q_nope, cfg)
     scale = 1.0 / math.sqrt(nope + rope_d)
     if impl == "pallas":
         from repro.kernels import ops as kops
@@ -366,17 +456,43 @@ def mla_decode(p, x, cache, cache_len, cfg, *, impl: str = "naive"):
             q_lat, q_rope.astype(jnp.float32), lat, kr, cache_len + 1,
             scale=scale).astype(jnp.float32)
     else:
-        s = (jnp.einsum("bqhr,bsr->bhqs", q_lat, lat.astype(jnp.float32))
-             + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32), kr.astype(jnp.float32))) * scale
-        kv_idx = jnp.arange(lat.shape[1])
-        kv_len = cache_len + 1
-        if jnp.ndim(kv_len) > 0:  # ragged continuous batch
-            valid = (kv_idx[None] < kv_len[:, None])[:, None, None]
-        else:
-            valid = (kv_idx < kv_len)[None, None, None]
-        s = jnp.where(valid, s, -1e30)
-        probs = jax.nn.softmax(s, axis=-1)
-        ctx = jnp.einsum("bhqs,bsr->bqhr", probs, lat.astype(jnp.float32))
+        ctx = _mla_naive_latent_ctx(q_lat, q_rope, lat, kr, cache_len + 1, scale)
+    out = jnp.einsum("bqhr,rhv->bqhv", ctx, w_uv.astype(jnp.float32)).astype(x.dtype)
+    y = out.reshape(B, 1, cfg.n_heads * v_dim) @ p["wo"]
+    return y, {"latent": lat, "k_rope": kr}
+
+
+def mla_decode_paged(p, x, cache, cache_len, block_table, cfg, *,
+                     impl: str = "naive"):
+    """Absorbed-matrix MLA decode over paged latent pools.
+
+    cache: {"latent": (num_blocks, block_size, r),
+            "k_rope": (num_blocks, block_size, rd)} shared physical blocks;
+    ``block_table`` (B, T) int32. Same latent-space math as
+    :func:`mla_decode`, with the per-sequence cache reached through the
+    table (gathered for ``naive``, scalar-prefetched for ``pallas``).
+    """
+    from repro.paging import gather_paged_kv
+
+    B = x.shape[0]
+    nope, v_dim, rope_d = cfg.qk_nope_head_dim, cfg.v_head_dim, cfg.qk_rope_head_dim
+    pos = _decode_positions(cache_len, B)
+    q_nope, q_rope, latent_new, k_rope_new = _mla_qkv(p, x, cfg, pos)
+
+    lat = _scatter_token_paged(cache["latent"], latent_new, cache_len, block_table)
+    kr = _scatter_token_paged(cache["k_rope"], k_rope_new, cache_len, block_table)
+
+    q_lat, w_uv = _mla_absorbed_q(p, q_nope, cfg)
+    scale = 1.0 / math.sqrt(nope + rope_d)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        ctx = kops.decode_attention_mla_paged(
+            q_lat, q_rope.astype(jnp.float32), lat, kr, block_table,
+            cache_len + 1, scale=scale).astype(jnp.float32)
+    else:
+        ctx = _mla_naive_latent_ctx(
+            q_lat, q_rope, gather_paged_kv(lat, block_table),
+            gather_paged_kv(kr, block_table), cache_len + 1, scale)
     out = jnp.einsum("bqhr,rhv->bqhv", ctx, w_uv.astype(jnp.float32)).astype(x.dtype)
     y = out.reshape(B, 1, cfg.n_heads * v_dim) @ p["wo"]
     return y, {"latent": lat, "k_rope": kr}

@@ -24,6 +24,9 @@ class Model:
     prefill: Optional[Callable] = None  # (params, batch) -> (logits, cache)
     init_cache: Optional[Callable] = None  # (batch, max_len, dtype) -> cache
     decode_step: Optional[Callable] = None  # (params, cache, tokens, cache_len) -> (logits, cache)
+    # paged KV layout (dense/moe only): pools + block tables instead of slabs
+    init_paged_cache: Optional[Callable] = None  # (num_blocks, block_size, dtype) -> pools
+    paged_decode_step: Optional[Callable] = None  # (params, pools, tokens, cache_len, block_table) -> (logits, pools)
 
 
 def build_model(cfg: ModelConfig, *, impl: str = "chunked", chunk: int = 1024,
@@ -70,9 +73,20 @@ def build_model(cfg: ModelConfig, *, impl: str = "chunked", chunk: int = 1024,
                                                    remat=remat, moe_cf=moe_cf),
         prefill=lambda p, b: transformer.prefill_decoder(
             p, cfg, b["tokens"], image_embed=b.get("image_embed"),
-            audio_embed=b.get("audio_embed"), impl=impl, chunk=chunk, moe_cf=moe_cf),
+            audio_embed=b.get("audio_embed"), impl=impl, chunk=chunk, moe_cf=moe_cf,
+            last_pos=b.get("last_pos")),
         init_cache=lambda batch, max_len, dtype=jnp.bfloat16: transformer.init_cache_decoder(
             cfg, batch, max_len, dtype),
         decode_step=lambda p, cache, tokens, cache_len: transformer.decode_step_decoder(
             p, cfg, cache, tokens, cache_len, impl=impl, moe_cf=moe_cf),
+        init_paged_cache=(
+            (lambda num_blocks, block_size, dtype=jnp.bfloat16:
+             transformer.init_paged_cache_decoder(cfg, num_blocks, block_size, dtype))
+            if cfg.family in ("dense", "moe") else None),
+        paged_decode_step=(
+            (lambda p, cache, tokens, cache_len, block_table:
+             transformer.decode_step_decoder(p, cfg, cache, tokens, cache_len,
+                                             impl=impl, moe_cf=moe_cf,
+                                             block_table=block_table))
+            if cfg.family in ("dense", "moe") else None),
     )

@@ -14,9 +14,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import ssm
-from repro.models.attention import (attn_params, gqa_decode, gqa_forward,
-                                    gqa_params, init_gqa_cache, init_mla_cache,
-                                    mla_decode, mla_forward)
+from repro.models.attention import (attn_params, gqa_decode, gqa_decode_paged,
+                                    gqa_forward, gqa_params, init_gqa_cache,
+                                    init_gqa_pool, init_mla_cache,
+                                    init_mla_pool, mla_decode,
+                                    mla_decode_paged, mla_forward)
 from repro.models.common import (apply_mlp, apply_norm, cross_entropy,
                                  dense_init, embed_tokens, mlp_params,
                                  norm_params)
@@ -326,14 +328,39 @@ def forward_decoder(params, cfg, tokens, *, image_embed=None, audio_embed=None,
     return logits, aux, h
 
 
+def _last_logits(params, cfg, h, last_pos=None):
+    """Logits of the last *valid* prompt position. ``last_pos=None`` means the
+    final position; an index (host int or traced scalar) selects earlier —
+    the bucketed-prefill case, where the prompt is right-padded to a bucket
+    length and causality keeps every position < true length unaffected."""
+    if last_pos is None:
+        return _logits(params, cfg, h[:, -1:])
+    return _logits(params, cfg, jax.lax.dynamic_slice_in_dim(
+        h, jnp.asarray(last_pos, jnp.int32), 1, 1))
+
+
 def prefill_decoder(params, cfg, tokens, *, image_embed=None, audio_embed=None,
-                    impl="chunked", chunk=1024, moe_cf=1.25):
-    """Single-pass prefill: returns (logits, cache) with per-layer caches/states."""
+                    impl="chunked", chunk=1024, moe_cf=1.25, last_pos=None):
+    """Single-pass prefill: returns (logits, cache) with per-layer caches/states.
+
+    ``last_pos`` supports bucketed admission: prompts padded up to a bucket
+    length still report the logits of their true last token.
+    """
     if cfg.family not in ("ssm", "hybrid"):
         logits, aux, (h, caches) = forward_decoder(
             params, cfg, tokens, image_embed=image_embed, audio_embed=audio_embed,
             impl=impl, chunk=chunk, return_cache=True, moe_cf=moe_cf)
+        if last_pos is not None:
+            logits = _last_logits(params, cfg, h, last_pos)
         return logits, caches
+
+    if last_pos is not None:
+        # recurrent families carry the padded positions *through their
+        # state* — a right-padded prompt corrupts it, so there is no valid
+        # last_pos semantics to offer; fail loudly over a silent wrong token
+        raise ValueError(f"last_pos (bucketed prefill) is not supported for "
+                         f"the {cfg.family!r} family: recurrent state would "
+                         f"absorb the padding")
 
     B, S = tokens.shape
     h = embed_tokens(params["embed"], tokens)
@@ -432,17 +459,39 @@ def init_cache_decoder(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
         lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape).copy(), percfg)
 
 
+def init_paged_cache_decoder(cfg, num_blocks: int, block_size: int,
+                             dtype=jnp.bfloat16):
+    """Paged KV layout for dense/moe: per-layer (num_blocks, block_size, ...)
+    pools with a leading layer axis. One block-table row addresses the same
+    physical block index in every layer's pool, so the table is shared
+    across the stack."""
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(f"paged KV cache needs a slotted-KV family, "
+                         f"got {cfg.family!r}")
+    per = init_mla_pool(cfg, num_blocks, block_size, dtype) if cfg.use_mla \
+        else init_gqa_pool(cfg, num_blocks, block_size, dtype)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape).copy(), per)
+
+
 def decode_step_decoder(params, cfg, cache, tokens, cache_len, *, impl="chunked",
-                        moe_cf=1.25):
+                        moe_cf=1.25, block_table=None):
     """One-token decode. tokens: (B,1) int32; cache_len: scalar or (B,) int32.
 
     ``impl="pallas"`` selects the fused single-query flash-decode kernel for
     every KV-cache attention in the stack; any other impl uses the naive
     decode oracle (the prefill/train impls chunked/pallas only apply to full
     sequence attention, so decode maps them onto {naive, pallas}).
+
+    ``block_table`` (B, T) int32 switches the dense/moe KV path to the paged
+    layout: ``cache`` leaves are (L, num_blocks, block_size, ...) pools and
+    every layer resolves the same table row to its own pool.
     """
     B = tokens.shape[0]
     dimpl = "pallas" if impl == "pallas" else "naive"
+    if block_table is not None and cfg.family not in ("dense", "moe"):
+        raise ValueError(f"paged decode needs a dense/moe KV cache, "
+                         f"got {cfg.family!r}")
     h = embed_tokens(params["embed"], tokens)
 
     if cfg.family == "ssm":
@@ -537,8 +586,16 @@ def decode_step_decoder(params, cfg, cache, tokens, cache_len, *, impl="chunked"
                 lp, lcache = xs
                 x = apply_norm(lp["ln1"], hh, cfg.norm)
                 if cfg.use_mla:
-                    a, lnew = mla_decode(lp["attn"], x, lcache, cache_len, cfg,
-                                         impl=dimpl)
+                    if block_table is not None:
+                        a, lnew = mla_decode_paged(lp["attn"], x, lcache,
+                                                   cache_len, block_table, cfg,
+                                                   impl=dimpl)
+                    else:
+                        a, lnew = mla_decode(lp["attn"], x, lcache, cache_len,
+                                             cfg, impl=dimpl)
+                elif block_table is not None:
+                    a, lnew = gqa_decode_paged(lp["attn"], x, lcache, cache_len,
+                                               block_table, cfg, impl=dimpl)
                 else:
                     a, lnew = gqa_decode(lp["attn"], x, lcache, cache_len, cfg,
                                          impl=dimpl)

@@ -1,0 +1,160 @@
+"""Host-side block-pool allocator for paged KV caches.
+
+The KV cache is carved into fixed-size blocks of ``block_size`` token
+positions. Sequences own ordered lists of physical block ids (their *block
+table*); allocation and free are O(1) free-list operations. This is the
+memory-manager half of the paged subsystem — the device side (pool arrays +
+the block-table flash-decode kernel) never sees the free list, only the
+(B, max_blocks_per_seq) int32 tables built from it.
+
+Physical block 0 is reserved as the *null block*: retired serving slots keep
+decoding masked garbage until re-admission, and their table rows are reset to
+0 so those writes land in a block no live sequence owns — stale table entries
+pointing at freed (possibly re-allocated) blocks would otherwise corrupt the
+new owner's cache.
+
+Exhaustion raises ``BlockPoolExhausted`` instead of handing out a live
+block twice; the serve engine checks ``can_allocate`` at admission and
+leaves requests queued rather than corrupting resident sequences.
+"""
+from __future__ import annotations
+
+from typing import Dict, Hashable, List, Mapping, Optional
+
+
+class BlockPoolExhausted(RuntimeError):
+    """No free blocks left; the caller must retire or wait, never overwrite."""
+
+
+def _blocks_for(n_tokens: int, block_size: int) -> int:
+    return max(1, -(-int(n_tokens) // block_size))
+
+
+class BlockPool:
+    """Fixed-size-block allocator with per-sequence block tables."""
+
+    NULL_BLOCK = 0
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is the null block)")
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.num_blocks = int(num_blocks)
+        self.block_size = int(block_size)
+        # LIFO free list: freshly-freed blocks are reused first (their pool
+        # pages are the ones most likely still warm in cache)
+        self._free: List[int] = list(range(self.num_blocks - 1, 0, -1))
+        self._tables: Dict[Hashable, List[int]] = {}
+        self.peak_blocks_in_use = 0
+        self.total_allocs = 0
+
+    # -- capacity ----------------------------------------------------------
+
+    @property
+    def num_usable(self) -> int:
+        """Allocatable blocks (total minus the reserved null block)."""
+        return self.num_blocks - 1
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.num_usable - self.num_free
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return _blocks_for(n_tokens, self.block_size)
+
+    def can_allocate(self, n_tokens: int) -> bool:
+        return self.blocks_for(n_tokens) <= self.num_free
+
+    # -- alloc / free ------------------------------------------------------
+
+    def _take_block(self) -> int:
+        if not self._free:
+            raise BlockPoolExhausted(
+                f"pool exhausted: {self.num_usable} blocks "
+                f"({self.num_usable * self.block_size} token slots) all live")
+        self.total_allocs += 1
+        blk = self._free.pop()
+        in_use = self.blocks_in_use
+        if in_use > self.peak_blocks_in_use:
+            self.peak_blocks_in_use = in_use
+        return blk
+
+    def allocate(self, seq_id: Hashable, n_tokens: int) -> List[int]:
+        """Allocate blocks covering ``n_tokens`` positions for a new sequence."""
+        if seq_id in self._tables:
+            raise ValueError(f"sequence {seq_id!r} already has a block table")
+        need = self.blocks_for(n_tokens)
+        if need > self.num_free:
+            raise BlockPoolExhausted(
+                f"need {need} blocks for {n_tokens} tokens, "
+                f"only {self.num_free} free")
+        table = [self._take_block() for _ in range(need)]
+        self._tables[seq_id] = table
+        return list(table)
+
+    def append_token(self, seq_id: Hashable, position: int) -> Optional[int]:
+        """Ensure the block holding ``position`` exists (allocate-on-boundary).
+
+        Returns the newly-allocated physical block id, or None when the
+        position already lands in an owned block.
+        """
+        table = self._tables[seq_id]
+        blk_idx = int(position) // self.block_size
+        if blk_idx < len(table):
+            return None
+        if blk_idx != len(table):
+            raise ValueError(
+                f"non-contiguous append: position {position} wants block "
+                f"{blk_idx}, sequence owns {len(table)}")
+        blk = self._take_block()
+        table.append(blk)
+        return blk
+
+    def free(self, seq_id: Hashable) -> int:
+        """Return a sequence's blocks to the free list; returns count freed."""
+        table = self._tables.pop(seq_id)
+        self._free.extend(table)
+        return len(table)
+
+    # -- introspection -----------------------------------------------------
+
+    def block_table(self, seq_id: Hashable) -> List[int]:
+        return list(self._tables[seq_id])
+
+    def owned_blocks(self, seq_id: Hashable) -> int:
+        return len(self._tables.get(seq_id, ()))
+
+    def utilization(self) -> float:
+        """Fraction of usable blocks currently live."""
+        return self.blocks_in_use / max(self.num_usable, 1)
+
+    def fragmentation(self, live_tokens: Mapping[Hashable, int]) -> float:
+        """Internal fragmentation: fraction of allocated token slots not
+        backing a live token. ``live_tokens`` maps seq_id -> valid positions
+        (the serve engine's per-slot cache_len)."""
+        allocated = sum(len(t) for t in self._tables.values()) * self.block_size
+        if not allocated:
+            return 0.0
+        live = sum(min(int(live_tokens.get(s, 0)), len(t) * self.block_size)
+                   for s, t in self._tables.items())
+        return 1.0 - live / allocated
+
+    def stats(self, live_tokens: Optional[Mapping[Hashable, int]] = None) -> dict:
+        out = {
+            "num_blocks": self.num_blocks,
+            "block_size": self.block_size,
+            "blocks_in_use": self.blocks_in_use,
+            "num_free": self.num_free,
+            "peak_blocks_in_use": self.peak_blocks_in_use,
+            "utilization": round(self.utilization(), 4),
+            "total_allocs": self.total_allocs,
+            "n_sequences": len(self._tables),
+        }
+        if live_tokens is not None:
+            out["fragmentation"] = round(self.fragmentation(live_tokens), 4)
+        return out

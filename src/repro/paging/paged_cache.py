@@ -1,0 +1,90 @@
+"""Device-facing half of the paged KV cache.
+
+``PagedKVCache`` binds a ``BlockPool`` to the dense (max_batch,
+max_blocks_per_seq) int32 block-table array the decode step ships to the
+device: slot admission/append/release keep the numpy table in sync with the
+pool's per-sequence tables, and retired slots' rows reset to the null block
+so their masked-garbage decode writes can never land in a live block.
+
+The pool *arrays* themselves (``(num_blocks, block_size, ...)`` per layer)
+belong to the model (``model.init_paged_cache``) and flow through the jitted
+decode step donated, exactly like the contiguous slabs; this class only
+manages which physical block backs which (slot, logical-block) coordinate.
+
+``gather_paged_kv`` is the naive oracle: materialize a sequence's contiguous
+view by indexing the pool through its table. The paged Pallas kernel must
+match it (and hence the contiguous path) at f32.
+"""
+from __future__ import annotations
+
+from typing import Hashable, List, Mapping, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.paging.block_pool import BlockPool
+
+
+def gather_paged_kv(pool, block_table):
+    """Materialize contiguous caches from a block pool (naive oracle).
+
+    pool: (num_blocks, block_size, ...) — one layer's K, V or latent pool.
+    block_table: (B, T) int32 physical block ids per logical block.
+    Returns (B, T * block_size, ...): the virtual contiguous cache each
+    sequence sees; positions past its valid length read whatever the mapped
+    (or null) block holds and must be masked by ``kv_len`` downstream.
+    """
+    table = jnp.clip(jnp.asarray(block_table, jnp.int32), 0,
+                     pool.shape[0] - 1)
+    gathered = pool[table]  # (B, T, block_size, ...)
+    B, T, bs = gathered.shape[:3]
+    return gathered.reshape((B, T * bs) + gathered.shape[3:])
+
+
+class PagedKVCache:
+    """Block pool + per-slot block-table rows for the serve engine."""
+
+    def __init__(self, num_blocks: int, block_size: int, max_batch: int,
+                 max_blocks_per_seq: int):
+        self.pool = BlockPool(num_blocks, block_size)
+        self.block_size = block_size
+        self.max_blocks_per_seq = max_blocks_per_seq
+        # rows default to the null block: idle slots' masked decode writes
+        # land somewhere no live sequence reads
+        self.tables = np.zeros((max_batch, max_blocks_per_seq), np.int32)
+        self._slot_seq: List[Optional[Hashable]] = [None] * max_batch
+
+    def admit(self, slot: int, seq_id: Hashable, n_tokens: int) -> List[int]:
+        """Allocate blocks for a prompt and install them in the slot's row."""
+        blocks = self.pool.allocate(seq_id, n_tokens)
+        if len(blocks) > self.max_blocks_per_seq:
+            self.pool.free(seq_id)
+            raise ValueError(
+                f"{n_tokens} tokens need {len(blocks)} blocks > table width "
+                f"{self.max_blocks_per_seq}")
+        self.tables[slot, :] = BlockPool.NULL_BLOCK
+        self.tables[slot, :len(blocks)] = blocks
+        self._slot_seq[slot] = seq_id
+        return blocks
+
+    def append(self, slot: int, position: int) -> Optional[int]:
+        """Allocate-on-boundary for the decode write at ``position``."""
+        if position // self.block_size >= self.max_blocks_per_seq:
+            raise ValueError(f"position {position} exceeds the table width "
+                             f"({self.max_blocks_per_seq} blocks of "
+                             f"{self.block_size})")
+        seq_id = self._slot_seq[slot]
+        blk = self.pool.append_token(seq_id, position)
+        if blk is not None:
+            self.tables[slot, position // self.block_size] = blk
+        return blk
+
+    def release(self, slot: int) -> int:
+        """Free the slot's blocks and reset its row to the null block."""
+        seq_id = self._slot_seq[slot]
+        self._slot_seq[slot] = None
+        self.tables[slot, :] = BlockPool.NULL_BLOCK
+        return self.pool.free(seq_id)
+
+    def stats(self, live_tokens: Optional[Mapping[Hashable, int]] = None) -> dict:
+        return self.pool.stats(live_tokens)

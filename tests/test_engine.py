@@ -8,7 +8,8 @@ import pytest
 from repro.configs.base import ModelConfig
 from repro.core.choices import MeshChoice
 from repro.core.cost import ChoiceProfile, ladder, ladder_sensitivities
-from repro.engine.events import (Burst, InterferenceTrace, ScriptedFaults)
+from repro.engine.events import (Burst, InterferenceTrace, ScriptedFaults,
+                                 ThermalTrace)
 from repro.engine.rungs import Rung, default_rung_ladder, rungs_from_ladder
 from repro.engine.session import TrainSession
 from repro.engine.timeline import Timeline
@@ -41,6 +42,44 @@ def test_trace_parse_and_slowdown():
 def test_trace_parse_rejects(bad):
     with pytest.raises((ValueError, TypeError)):
         InterferenceTrace.parse(bad)
+
+
+def test_thermal_trace_parse_and_hysteresis():
+    tr = ThermalTrace.parse("0.5:0.2:3.0")
+    assert (tr.heat_rate, tr.cool_rate, tr.slowdown) == (0.5, 0.2, 3.0)
+    tr5 = ThermalTrace.parse("0.5:0.2:3.0:2.0:1.0")
+    assert (tr5.trigger_temp, tr5.release_temp) == (2.0, 1.0)
+
+    # full power heats 0.3/step: clean until temp crosses 1.0, then throttled
+    tr = ThermalTrace(heat_rate=0.5, cool_rate=0.2, slowdown=3.0,
+                      trigger_temp=1.0, release_temp=0.3)
+    seen = [tr.effective_slowdown(s, 1.0) for s in range(5)]
+    assert seen[:3] == [1.0, 1.0, 1.0] and seen[3] == 3.0  # temp 1.2 at step 3
+    # a downgraded rung (sensitivity 0.2) sheds heat, but hysteresis keeps
+    # the throttle on until temp falls below release, not trigger
+    slows = [tr.effective_slowdown(5 + s, 0.2) for s in range(20)]
+    assert slows[0] == pytest.approx(1.4)  # still throttled, scaled by sens
+    assert 1.0 in slows  # ...then released after cooling
+    released = slows.index(1.0)
+    assert released > 3  # cooled past trigger yet stayed throttled (hysteresis)
+    assert not tr.throttled
+
+    # re-evaluating one step (e.g. comparing candidate rungs for an
+    # adaptive-vs-static curve) reads the state without advancing it
+    tr2 = ThermalTrace(heat_rate=0.5, cool_rate=0.2, slowdown=3.0,
+                       trigger_temp=1.0, release_temp=0.3)
+    tr2.effective_slowdown(0, 1.0)
+    t_after = tr2.temp
+    for sens in (1.0, 0.4, 0.16):
+        tr2.effective_slowdown(0, sens)
+    assert tr2.temp == t_after
+
+
+@pytest.mark.parametrize("bad", ["0.5:0.2", "0:0.2:3", "0.5:0.2:0.5",
+                                 "0.5:0.2:3:1.0:1.5", "x:y:z"])
+def test_thermal_trace_parse_rejects(bad):
+    with pytest.raises((ValueError, TypeError)):
+        ThermalTrace.parse(bad)
 
 
 def test_scripted_faults_respect_healthy_pool():
@@ -210,6 +249,52 @@ def test_session_burst_downgrade_recover_no_restart():
     assert res.losses[-1] == pytest.approx(res_clean.losses[-1], rel=0.05)
     # training still works end to end
     assert res.losses[-1] < res.losses[0]
+
+
+def test_session_thermal_burst_downgrade_recover():
+    """Closed-loop thermal throttling: the full rung heats the die until the
+    throttle engages (the burst), the controller downgrades, the cheaper
+    rung's lower power draw lets the die cool below the release threshold,
+    and the clear streak upgrades back — the relinquish-and-recover dynamic
+    with the event source's own hysteresis constants."""
+    trace = ThermalTrace(heat_rate=0.5, cool_rate=0.3, slowdown=4.0,
+                         trigger_temp=1.0, release_temp=0.4)
+    res = _session(_ladder_with_estimates(), trace).run(40)
+    tl = res.timeline
+
+    downs = [m for m in tl.migrations if m.reason == "interference"]
+    assert downs, "no downgrade under a 4x thermal throttle"
+    # heating 0.2/step net at full power: throttle engages at step 4;
+    # detection follows within the monitor's window
+    assert downs[0].step >= 4, "downgraded before the throttle engaged"
+    ups = [m for m in tl.migrations if m.reason == "clear"]
+    assert ups, "never recovered after cooling below the release threshold"
+    assert ups[0].step > downs[0].step
+    assert all(m.kind == "in-place" for m in tl.migrations)
+    assert len(res.losses) == 40 and int(res.state["step"]) == 40
+
+
+def test_train_cli_adaptive_with_thermal_trace(tmp_path):
+    from repro.launch import train as T
+    out = str(tmp_path / "tl.json")
+    losses = T.main(["--arch", "granite-3-2b", "--reduced", "--steps", "16",
+                     "--batch", "8", "--seq", "32", "--optimizer", "adam",
+                     "--lr", "1e-3", "--log-every", "100", "--adaptive",
+                     "--thermal-trace", "0.6:0.3:6.0",
+                     "--timeline-out", out])
+    assert len(losses) == 16
+    with open(out) as f:
+        tl = Timeline.from_json(json.load(f))
+    assert any(m.reason == "interference" for m in tl.migrations), \
+        "a 6x thermal throttle must trigger at least one downgrade"
+
+
+def test_train_cli_rejects_both_traces():
+    from repro.launch import train as T
+    with pytest.raises(SystemExit):
+        T.main(["--arch", "llama3.2-1b", "--reduced", "--steps", "2",
+                "--interference-trace", "1:2:2.0",
+                "--thermal-trace", "0.5:0.2:2.0"])
 
 
 def test_session_resume_casts_params_to_active_rung_dtype():
