@@ -1,0 +1,176 @@
+"""Shared-SoC arbitration: one arbiter over train+serve vs the alternatives.
+
+Three ways to run a personalization-training job and an interactive serving
+job on one SoC, measured under the same contention trace:
+
+- **shared-arbiter**: both jobs under one SwanRuntime. Each runs its fastest
+  rung while the device is quiet; under contention the arbiter downgrades
+  the job that relinquishes the most contended resource per unit of goodput
+  lost, and upgrades back when the trace clears.
+- **static-partition**: the no-runtime baseline — resources are split ahead
+  of time, each job pinned to its middle rung forever. Safe under
+  contention, wasteful the rest of the time.
+- **serve-only**: the serving job alone (training deferred entirely) — what
+  a device does today; its goodput counts only serving.
+
+Goodput is normalized useful compute per virtual second: a train step is
+worth its full-rung clean latency, a served token 1/slots of the serving
+job's; virtual time is the per-tick max of the jobs' observed latencies
+(they share the quantum). Step latencies are simulated from the rungs'
+estimates x the trace (deterministic); the compute, migrations and state
+carry-over are real.
+
+Gate (CI): shared-arbiter goodput >= static-partition goodput.
+Writes BENCH_arbitration.json.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+TRAIN_EST = 0.1   # clean full-rung train-step seconds (virtual)
+SERVE_EST = 0.1   # clean full-rung decode-step seconds (virtual)
+
+
+def _tiny_cfg(name):
+    from repro.configs.base import ModelConfig
+    return ModelConfig(name=name, family="dense", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                       tie_embeddings=True,
+                       source="benchmarks/arbitration_bench.py")
+
+
+def _train_job(trace, ticks, *, pinned=False):
+    import dataclasses
+    from repro.engine.jobs import trace_latency_fn
+    from repro.engine.rungs import default_rung_ladder
+    from repro.engine.session import TrainSession
+    from repro.launch.train import make_batch_fn
+    from repro.optim.optimizers import sgd
+
+    cfg = _tiny_cfg("arb-train-tiny")
+    rungs = default_rung_ladder(batch=8, microbatch=1, attn_impl="naive")
+    for r in rungs:
+        r.latency_estimate_s = TRAIN_EST * r.rel_latency
+    if pinned:  # static partition: the middle rung, forever
+        rungs = [dataclasses.replace(rungs[min(1, len(rungs) - 1)],
+                                     name="train-pinned")]
+    ses = TrainSession(cfg, rungs, optimizer=sgd(), lr=0.05,
+                       batch_fn=make_batch_fn(cfg, 8, 32),
+                       latency_fn=trace_latency_fn(trace), adaptive=not pinned,
+                       upgrade_patience=4, verbose=False, name="train")
+    return ses.bind(ticks)
+
+
+def _serve_job(slots, trace, *, pinned=False):
+    import jax
+    from repro.engine.jobs import ServeJob, ServeRung, trace_latency_fn
+    from repro.launch.serve import ContinuousBatchingEngine, Request
+    from repro.models.registry import build_model
+
+    cfg = _tiny_cfg("arb-serve-tiny")
+    model = build_model(cfg, impl="naive")
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ContinuousBatchingEngine(model, params, max_batch=slots,
+                                      max_seq=48)
+    rng = np.random.default_rng(0)
+    # a stream long enough to outlast the tick budget in every config
+    reqs = [Request(uid=i, prompt=rng.integers(0, 64, 6).astype(np.int32),
+                    max_new_tokens=16) for i in range(64)]
+    rels = (1.0, 1.4, 1.9)
+    sens = (1.0, 0.4, 0.16)
+    caps = (None, max(1, slots // 2), max(1, slots // 4))
+    rungs = [ServeRung(name=n, slot_cap=c, interference_sensitivity=s,
+                       rel_latency=r, latency_estimate_s=SERVE_EST * r)
+             for n, c, s, r in zip(("serve-full", "serve-capped",
+                                    "serve-lean"), caps, sens, rels)]
+    if pinned:
+        import dataclasses
+        rungs = [dataclasses.replace(rungs[1], name="serve-pinned")]
+    return ServeJob(engine, reqs, rungs=rungs, latency_fn=trace_latency_fn(trace),
+                    adaptive=not pinned, upgrade_patience=4, name="serve")
+
+
+def _goodput(result, slots) -> float:
+    """Normalized useful compute per virtual second (see module docstring)."""
+    useful = 0.0
+    for s in result.timeline.steps:
+        if s.job == "train":
+            useful += TRAIN_EST  # one optimizer step, whatever the rung
+        elif s.job == "serve":
+            useful += s.work * SERVE_EST / slots
+    return useful / max(result.virtual_time_s, 1e-12)
+
+
+def compare(ticks: int = 60, slots: int = 4,
+            json_path: str = "BENCH_arbitration.json"):
+    """Run the three configurations on the same contention trace."""
+    from repro.engine.events import InterferenceTrace
+    from repro.engine.runtime import SwanRuntime
+
+    burst = (ticks // 3, ticks // 3 + ticks // 4, 3.0)
+    trace = InterferenceTrace.parse(f"{burst[0]}:{burst[1]}:{burst[2]}")
+
+    def run(jobs):
+        rt = SwanRuntime(jobs, trace=trace)
+        return rt.run(ticks)
+
+    res_shared = run([_train_job(trace, ticks), _serve_job(slots, trace)])
+    res_part = run([_train_job(trace, ticks, pinned=True),
+                    _serve_job(slots, trace, pinned=True)])
+    res_serve = run([_serve_job(slots, trace)])
+
+    out = {}
+    for name, res in (("shared", res_shared), ("partition", res_part),
+                      ("serve_only", res_serve)):
+        out[name] = {
+            "goodput": round(_goodput(res, slots), 4),
+            "virtual_time_s": round(res.virtual_time_s, 4),
+            "work": {k: round(v, 1) for k, v in res.work.items()},
+            "migrations": len(res.timeline.migrations),
+            "summary": res.timeline.summary(),
+        }
+    payload = {
+        "ticks": ticks, "slots": slots,
+        "trace": trace.to_json(),
+        "configs": out,
+        "shared_vs_partition": round(out["shared"]["goodput"]
+                                     / max(out["partition"]["goodput"], 1e-12), 4),
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=1)
+    return payload
+
+
+def run(fast: bool = True, json_path: str = "BENCH_arbitration.json"):
+    ticks = 60 if fast else 120
+    t0 = time.perf_counter()
+    payload = compare(ticks=ticks, json_path=json_path)
+    us = (time.perf_counter() - t0) * 1e6
+    rows = []
+    for name in ("shared", "partition", "serve_only"):
+        c = payload["configs"][name]
+        rows.append((f"arbitration/{name}/goodput", us,
+                     f"{c['goodput']};migrations={c['migrations']}"))
+    rows.append(("arbitration/shared_vs_partition", us,
+                 f"{payload['shared_vs_partition']}x"))
+    assert payload["configs"]["shared"]["goodput"] >= \
+        payload["configs"]["partition"]["goodput"], \
+        "shared arbiter must match or beat the static partition's goodput"
+    assert payload["configs"]["shared"]["goodput"] >= \
+        payload["configs"]["serve_only"]["goodput"], \
+        "co-tenancy must not lose to deferring training entirely"
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default="BENCH_arbitration.json")
+    args = ap.parse_args()
+    for name, us, derived in run(fast=not args.full, json_path=args.out):
+        print(f"{name},{us:.1f},{derived}")

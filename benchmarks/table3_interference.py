@@ -64,6 +64,7 @@ def adaptive_vs_static(steps: int = 40, json_path: str = "BENCH_table3_timeline.
 
     from repro.configs.base import ModelConfig
     from repro.engine.events import InterferenceTrace
+    from repro.engine.jobs import trace_latency_fn
     from repro.engine.rungs import default_rung_ladder
     from repro.engine.session import TrainSession
     from repro.launch.train import make_batch_fn
@@ -79,9 +80,7 @@ def adaptive_vs_static(steps: int = 40, json_path: str = "BENCH_table3_timeline.
     for r in rungs:
         r.latency_estimate_s = 0.1 * r.rel_latency  # virtual clean step time
 
-    def latency_fn(step, rung, dt):
-        return rung.latency_estimate_s * trace.effective_slowdown(
-            step, rung.interference_sensitivity)
+    latency_fn = trace_latency_fn(trace)
 
     def session(adaptive):
         ru = rungs if adaptive else [_dc.replace(rungs[0], name="static")]

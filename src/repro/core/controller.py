@@ -35,10 +35,17 @@ class SwanController:
         self.migrations: List[Migration] = []
         self._clear_streak = 0
         self._step = 0
+        self._skip_next = False
 
     @property
     def active(self) -> ChoiceProfile:
         return self.ladder[self.idx]
+
+    def can_downgrade(self) -> bool:
+        return self.idx + 1 < len(self.ladder)
+
+    def can_upgrade(self) -> bool:
+        return self.idx > 0
 
     def _migrate(self, new_idx: int, reason: str):
         if new_idx == self.idx:
@@ -47,27 +54,66 @@ class SwanController:
         self.idx = new_idx
         self.monitor.rebase(self.active.latency_s)
         self._clear_streak = 0
+        # the first sample on the new choice carries the migration's own tail
+        # (compile, remesh transfer); observing it would re-anchor the monitor
+        # on a one-off spike and immediately re-migrate
+        self._skip_next = True
         if self.on_migrate:
             self.on_migrate(self.active, reason)
 
-    def observe_step(self, observed_latency_s: float) -> ChoiceProfile:
-        """Feed one observed local-step latency; returns the (possibly new)
-        active choice for the next step."""
+    def propose(self, observed_latency_s: float) -> Optional[str]:
+        """Feed one observed local-step latency and return what this choice's
+        monitor *wants* — ``"down"``, ``"up"`` or ``None`` — without
+        migrating. An arbiter (engine/runtime.SwanRuntime) collects proposals
+        across co-tenant jobs and commits at most one; a vetoed proposal
+        keeps its monitor state, so persistent pressure re-proposes next
+        step. The first sample after a migration is skipped (see _migrate)."""
         self._step += 1
+        if self._skip_next:
+            self._skip_next = False
+            return None
         self.monitor.observe(observed_latency_s)
-        if self.monitor.interfering and self.idx + 1 < len(self.ladder):
-            self._migrate(self.idx + 1, "interference")
-        elif self.monitor.clear:
+        if self.monitor.interfering:
+            # a pressured step never counts toward the upgrade patience —
+            # even when the proposal is vetoed or the ladder is bottomed out
+            self._clear_streak = 0
+            return "down" if self.can_downgrade() else None
+        if self.monitor.clear:
             self._clear_streak += 1
-            if self._clear_streak >= self.upgrade_patience and self.idx > 0:
-                self._migrate(self.idx - 1, "clear")
+            if self._clear_streak >= self.upgrade_patience and self.can_upgrade():
+                return "up"
         else:
             self._clear_streak = 0
+        return None
+
+    def note_external_skip(self) -> None:
+        """The caller discarded a post-migration sample itself (e.g. the
+        session's wall-clock warmup-step skip); don't drop a second, clean
+        sample on top of it."""
+        self._skip_next = False
+
+    def commit(self, direction: str, reason: str) -> ChoiceProfile:
+        """Apply a proposal (the arbiter's accept path)."""
+        if direction == "down" and self.can_downgrade():
+            self._migrate(self.idx + 1, reason)
+        elif direction == "up" and self.can_upgrade():
+            self._migrate(self.idx - 1, reason)
+        return self.active
+
+    def observe_step(self, observed_latency_s: float) -> ChoiceProfile:
+        """Feed one observed local-step latency; returns the (possibly new)
+        active choice for the next step (propose + self-commit — the
+        single-job path with no arbiter in the loop)."""
+        proposal = self.propose(observed_latency_s)
+        if proposal == "down":
+            return self.commit("down", "interference")
+        if proposal == "up":
+            return self.commit("up", "clear")
         return self.active
 
     def force_downgrade(self, reason: str = "external") -> ChoiceProfile:
         """Hard interference (device loss / preemption notice)."""
-        if self.idx + 1 < len(self.ladder):
+        if self.can_downgrade():
             self._migrate(self.idx + 1, reason)
         return self.active
 

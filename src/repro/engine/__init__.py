@@ -1,15 +1,25 @@
-"""Adaptive training runtime (paper Fig. 4b as a live engine).
+"""Adaptive SoC runtime (paper Fig. 4b as a live engine).
 
-``rungs``    — executable ladder entries (Rung) with cached jitted steps.
+``rungs``    — executable training ladder entries (Rung) with cached jitted
+               steps.
+``jobs``     — the SocJob protocol (anything migratable the arbiter can
+               schedule), serving rungs and ServeJob.
+``runtime``  — SwanRuntime: the single event loop + arbiter over every job
+               sharing the SoC (traces, thermals, faults, energy budget).
 ``events``   — interference traces + device-loss event sources.
-``timeline`` — machine-readable migration/step history.
-``session``  — TrainSession: the event loop that migrates between Rungs
-               mid-training without restarting.
+``timeline`` — machine-readable migration/step history (job-tagged when
+               merged across a runtime).
+``session``  — TrainSession: the training job; standalone ``run()`` is a
+               single-job runtime.
 """
 from repro.engine.events import (Burst, DeviceLossEvent, FaultModelEvents,  # noqa: F401
-                                 InterferenceTrace, ScriptedFaults)
+                                 InterferenceTrace, ScriptedFaults,
+                                 ThermalTrace)
+from repro.engine.jobs import (ServeJob, ServeRung, SocJob,  # noqa: F401
+                               StepReport, default_serve_ladder)
 from repro.engine.rungs import (Rung, default_rung_ladder,  # noqa: F401
                                 rungs_from_ladder)
+from repro.engine.runtime import RuntimeResult, SwanRuntime  # noqa: F401
 from repro.engine.session import SessionResult, TrainSession  # noqa: F401
 from repro.engine.timeline import (MigrationRecord, StepRecord,  # noqa: F401
                                    Timeline)

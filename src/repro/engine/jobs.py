@@ -1,0 +1,370 @@
+"""SocJob: the unit of work the SwanRuntime arbiter schedules.
+
+Swan's premise is that many workloads contend for one SoC; the engine's job
+is to arbitrate between them. A ``SocJob`` is anything that can live under
+that arbitration:
+
+- it exposes a **rung ladder** (``rungs()``) — ordered fastest/costliest
+  first, each rung carrying an ``interference_sensitivity`` (how much of a
+  co-tenant's contention it still feels / how much contended resource it
+  holds) and a ``rel_latency`` (goodput cost of running there);
+- it executes one scheduling quantum at a time (``step(tick)`` ->
+  :class:`StepReport`), reports what its monitor sees (``observe``), and can
+  **migrate** between rungs without restarting (``migrate``).
+
+Two implementations ship: ``engine.session.TrainSession`` (training; its old
+event loop is now the single-job special case of the runtime's) and
+:class:`ServeJob` below, which wraps ``launch.serve.ContinuousBatchingEngine``
+with a *serving* rung ladder — decode concurrency cap, attention impl, KV
+dtype — so serving becomes migratable exactly like training.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.core.controller import SwanController
+from repro.core.cost import ChoiceProfile, ladder_sensitivities
+from repro.engine.timeline import MigrationRecord, Timeline
+
+
+@dataclasses.dataclass
+class StepReport:
+    """What one scheduling quantum of a job produced. (Job completion is the
+    ``SocJob.done`` property, polled by the runtime — not part of the
+    report.)"""
+    latency_s: float  # wall time of the quantum
+    work: float = 0.0  # goodput units (samples trained / tokens emitted)
+    loss: Optional[float] = None  # training jobs report their loss
+    warmup: bool = False  # first quantum on a rung (compile tail)
+    observed_s: Optional[float] = None  # filled in by observe()
+
+
+def trace_latency_fn(trace):
+    """Deterministic ``latency_fn`` for benchmarks/tests: each rung's planner
+    estimate scaled by the trace's slowdown at that rung's sensitivity —
+    what a real measurement would observe, minus machine noise. Every rung
+    needs ``latency_estimate_s``."""
+    def fn(step, rung, dt):
+        eff = trace.effective_slowdown(step, rung.interference_sensitivity) \
+            if trace is not None else 1.0
+        return rung.latency_estimate_s * eff
+    return fn
+
+
+class SocJob:
+    """Base/protocol for runtime-schedulable jobs.
+
+    Subclasses must provide ``name``, ``priority``, ``controller`` (a
+    SwanController over the ladder), ``timeline``, ``rungs()``, ``done``,
+    ``step``, ``observe`` and ``migrate``; the arbitration helpers below are
+    derived. Rung entries only need ``name``, ``interference_sensitivity``
+    and ``rel_latency`` attributes (``power_draw`` optional — defaults to the
+    sensitivity, the same power proxy ThermalTrace integrates).
+    """
+
+    name: str = "job"
+    priority: float = 1.0
+    controller: SwanController
+    timeline: Timeline
+
+    # -- ladder --------------------------------------------------------------
+    def rungs(self) -> Sequence[Any]:
+        raise NotImplementedError
+
+    @property
+    def rung_idx(self) -> int:
+        return self.controller.idx
+
+    @property
+    def active_rung(self):
+        return self.rungs()[self.rung_idx]
+
+    def sensitivity(self) -> float:
+        return float(self.active_rung.interference_sensitivity)
+
+    def power_draw(self) -> float:
+        """Power this job's active rung draws (normalized units); the runtime
+        sums this across jobs to heat the shared ThermalTrace and to charge
+        the EnergyLoan."""
+        p = getattr(self.active_rung, "power_draw", None)
+        return float(p) if p is not None else self.sensitivity()
+
+    def can_downgrade(self) -> bool:
+        return self.controller.can_downgrade()
+
+    def can_upgrade(self) -> bool:
+        return self.controller.can_upgrade()
+
+    def relinquish_score(self) -> float:
+        """Arbitration score for downgrading this job one rung: contended
+        resource relinquished per fraction of goodput lost, discounted by
+        priority. Under pressure the runtime downgrades the argmax — the job
+        that gives the co-tenants the most relief at the least cost."""
+        rungs = self.rungs()
+        i = self.rung_idx
+        if i + 1 >= len(rungs):
+            return float("-inf")
+        a, b = rungs[i], rungs[i + 1]
+        dsens = max(0.0, float(a.interference_sensitivity)
+                    - float(b.interference_sensitivity))
+        # goodput fraction lost stepping down: rate ~ 1/rel_latency. Floored
+        # at 1% so a ladder that declares identical rel_latency (a "free"
+        # downgrade) still scores on a scale a co-tenant's sensitivity gap
+        # and priority can compete with, instead of winning every auction
+        lost = max(0.01, 1.0 - float(a.rel_latency) / float(b.rel_latency))
+        return dsens / (lost * max(float(self.priority), 1e-9))
+
+    # -- lifecycle -----------------------------------------------------------
+    @property
+    def done(self) -> bool:
+        raise NotImplementedError
+
+    def prepare(self) -> None:
+        """Called once before the first tick (idempotent)."""
+
+    def step(self, tick: int) -> StepReport:
+        raise NotImplementedError
+
+    def observe(self, tick: int, report: StepReport,
+                slowdown: float) -> Optional[str]:
+        """Digest one quantum: compute the observed latency (wall x the
+        shared-trace slowdown for this job's sensitivity), record it, and
+        return the monitor's proposal ("down" | "up" | None). The runtime
+        arbitrates across jobs before anything is committed."""
+        raise NotImplementedError
+
+    def migrate(self, direction: str, reason: str,
+                tick: int) -> Optional[MigrationRecord]:
+        """Commit an arbitrated proposal: switch rungs and carry state."""
+        raise NotImplementedError
+
+    def on_device_loss(self, tick: int, failed: Sequence[int]) -> None:
+        """Devices vanished from the shared pool. Mesh-backed jobs remesh;
+        single-device jobs (serving) keep streaming."""
+
+    def end_tick(self, tick: int) -> None:
+        """Post-arbitration bookkeeping (logging, periodic checkpoints)."""
+
+    def finalize(self) -> None:
+        """Called once when the runtime loop ends."""
+
+    # -- shared monitor policy ------------------------------------------------
+    # (subclasses provide ``adaptive``, ``latency_fn`` and ``_expected``:
+    # rung name -> calibrated clean latency)
+
+    def _monitor_proposal(self, report: StepReport, rung,
+                          dt: float, observed: float) -> Optional[str]:
+        """Feed policy shared by every job: non-adaptive jobs never propose;
+        in wall-clock mode the first step on a rung is discarded (it pays
+        the compile/migration tail — and counts as the controller's
+        post-migration skip, so a second, clean sample is not dropped too)
+        and the rung's clean latency is calibrated from the first steady
+        measurement."""
+        if not self.adaptive:
+            return None
+        feed = True
+        if self.latency_fn is None:
+            if report.warmup:
+                feed = False
+                self.controller.note_external_skip()
+            elif rung.name not in self._expected:
+                # calibrate this rung's clean latency from the wall
+                # measurement. Synthetic traces never slow the actual
+                # machine, so dt is clean even mid-burst; under real
+                # interference (no trace) a rung first visited while
+                # pressured calibrates high, which only delays detection
+                # until the post-clear upgrade re-visits it
+                self._expected[rung.name] = dt
+                self.controller.calibrate(dt)
+        return self.controller.propose(observed) if feed else None
+
+    def _recalibrate(self, from_rung, to_rung) -> Optional[float]:
+        """Re-anchor the monitor after a migration: prefer the target rung's
+        own calibration, else scale the departing rung's by the ladder's
+        relative latencies. Returns the expectation installed (if any)."""
+        expected = self._expected.get(to_rung.name)
+        if expected is None:
+            base = self._expected.get(from_rung.name)
+            if base is not None and from_rung.rel_latency > 0:
+                expected = base * (to_rung.rel_latency / from_rung.rel_latency)
+        if expected is not None:
+            self.controller.calibrate(expected)
+        return expected
+
+
+# ---------------------------------------------------------------------------
+# serving rungs + ServeJob
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ServeRung:
+    """One serving execution choice. ``None`` fields mean "the engine's
+    as-built setting" (so upgrading back to the top rung restores it):
+
+    - ``slot_cap``: max concurrently-resident requests (decode microbatch
+      cap) — fewer resident sequences stream less KV per step, the decode
+      analogue of shrinking the training microbatch;
+    - ``attn_impl``: decode attention kernel override;
+    - ``kv_dtype``: KV-cache dtype override ("bfloat16" halves cache
+      traffic; token streams may differ from the f32 rungs).
+    """
+    name: str
+    slot_cap: Optional[int] = None
+    attn_impl: Optional[str] = None
+    kv_dtype: Optional[str] = None
+    interference_sensitivity: float = 1.0
+    rel_latency: float = 1.0  # aggregate tokens/s cost of this rung
+    latency_estimate_s: Optional[float] = None
+    power_draw: Optional[float] = None  # defaults to sensitivity
+
+    def profile(self, *, position: int = 0, n: int = 1) -> ChoiceProfile:
+        lat = self.latency_estimate_s if self.latency_estimate_s is not None \
+            else self.rel_latency
+        return ChoiceProfile(choice=self, latency_s=lat, energy_j=lat,
+                             power_w=1.0, cost_key=(n - position,))
+
+
+def default_serve_ladder(max_batch: int, *, include_bf16_kv: bool = True
+                         ) -> List[ServeRung]:
+    """Serving downgrade ladder: each rung halves decode concurrency (the
+    contended-bandwidth knob) and the bottom rung additionally halves KV
+    traffic with a bf16 cache. Rungs whose knobs collapse to an earlier
+    rung's (tiny ``max_batch``) are dropped."""
+    specs = [("serve-full", None, None, 1.0),
+             ("serve-capped", max(1, max_batch // 2), None, 1.4),
+             ("serve-lean", max(1, max_batch // 4),
+              "bfloat16" if include_bf16_kv else None, 1.9)]
+    out: List[ServeRung] = []
+    seen = set()
+    for name, cap, kvd, rel in specs:
+        key = (cap if cap is None or cap < max_batch else None, kvd)
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(ServeRung(name=name, slot_cap=cap, kv_dtype=kvd,
+                             rel_latency=rel))
+    sens = ladder_sensitivities(len(out))
+    for r, s in zip(out, sens):
+        r.interference_sensitivity = s
+    return out
+
+
+class ServeJob(SocJob):
+    """A ContinuousBatchingEngine under runtime arbitration.
+
+    One tick = one engine step (admissions + one batched decode +
+    retirements). Migrations apply the target rung's knobs to the live
+    engine — resident sequences keep streaming across the switch.
+    """
+
+    def __init__(self, engine, requests: Sequence[Any] = (), *,
+                 rungs: Optional[Sequence[ServeRung]] = None,
+                 name: str = "serve", priority: float = 1.0,
+                 adaptive: bool = True, upgrade_patience: int = 5,
+                 latency_fn=None, verbose: bool = False):
+        self.engine = engine
+        self._requests = list(requests)
+        self._rungs = list(rungs) if rungs is not None \
+            else default_serve_ladder(engine.max_batch)
+        if not self._rungs:
+            raise ValueError("need at least one serve rung")
+        if latency_fn is not None and any(
+                r.latency_estimate_s is None for r in self._rungs):
+            raise ValueError("latency_fn mode needs latency_estimate_s on "
+                             "every serve rung")
+        self.name = name
+        self.priority = float(priority)
+        self.adaptive = adaptive and len(self._rungs) > 1
+        self.latency_fn = latency_fn
+        self.verbose = verbose
+        n = len(self._rungs)
+        profiles = [r.profile(position=i, n=n)
+                    for i, r in enumerate(self._rungs)]
+        self.controller = SwanController(profiles,
+                                         upgrade_patience=upgrade_patience)
+        self.timeline = Timeline()
+        self._expected: Dict[str, float] = {}
+        if latency_fn is not None:
+            for r in self._rungs:
+                self._expected[r.name] = r.latency_estimate_s
+        self._steps_on_rung = 0
+        self._step_idx = 0
+        self._prepared = False
+
+    # -- SocJob surface ------------------------------------------------------
+    def rungs(self) -> Sequence[ServeRung]:
+        return self._rungs
+
+    @property
+    def done(self) -> bool:
+        return self._prepared and not self.engine.queue and \
+            all(u is None for u in self.engine.slot_uid)
+
+    def prepare(self) -> None:
+        if self._prepared:
+            return
+        for req in self._requests:
+            self.engine.submit(req)
+        self._apply_rung(self.active_rung)
+        self._prepared = True
+
+    def step(self, tick: int) -> StepReport:
+        t0 = time.perf_counter()
+        emitted = self.engine.step()
+        dt = time.perf_counter() - t0
+        warmup = self._steps_on_rung == 0
+        self._steps_on_rung += 1
+        return StepReport(latency_s=dt, work=float(len(emitted)),
+                          warmup=warmup)
+
+    def observe(self, tick: int, report: StepReport,
+                slowdown: float) -> Optional[str]:
+        rung = self.active_rung
+        dt = report.latency_s
+        if self.latency_fn is not None:
+            observed = float(self.latency_fn(self._step_idx, rung, dt))
+        else:
+            observed = dt * slowdown
+        report.observed_s = observed
+        self.timeline.record_step(step=self._step_idx, rung=rung.name,
+                                  latency_s=round(dt, 6),
+                                  observed_s=round(observed, 6), loss=0.0,
+                                  work=report.work, warmup=report.warmup)
+        return self._monitor_proposal(report, rung, dt, observed)
+
+    def end_tick(self, tick: int) -> None:
+        # incremented here, not in observe(): a migration committed by the
+        # arbiter between the two must be recorded at the step that caused
+        # it (keeps serve and train migrations tick-aligned when merged)
+        self._step_idx += 1
+
+    def migrate(self, direction: str, reason: str,
+                tick: int) -> Optional[MigrationRecord]:
+        prev = self.controller.idx
+        self.controller.commit(direction, reason)
+        if self.controller.idx == prev:
+            return None
+        from_rung, to_rung = self._rungs[prev], self.active_rung
+        t0 = time.perf_counter()
+        self._apply_rung(to_rung)
+        cost_s = time.perf_counter() - t0
+        self._recalibrate(from_rung, to_rung)
+        self._steps_on_rung = 0
+        if self.verbose:
+            print(f"[swan] {self.name}: migrate {from_rung.name} -> "
+                  f"{to_rung.name} ({reason})")
+        return self.timeline.record_migration(
+            step=self._step_idx, from_rung=from_rung.name,
+            to_rung=to_rung.name, reason=reason, kind="in-place",
+            cost_s=round(cost_s, 6))
+
+    def _apply_rung(self, rung: ServeRung) -> None:
+        self.engine.set_slot_cap(rung.slot_cap)
+        self.engine.set_kv_dtype(rung.kv_dtype)
+        self.engine.set_attn_impl(rung.attn_impl)
+
+    def result(self) -> Dict[int, Any]:
+        return self.engine.finished

@@ -1,0 +1,202 @@
+"""SwanRuntime: one event loop and one arbiter over every job on the SoC.
+
+The paper's engine exists because many workloads contend for one SoC's
+resources. Before this module the repo had two disjoint runtimes — the
+training session's event loop and the serving engine's — each reacting to
+its own view of the device. ``SwanRuntime`` owns the single loop:
+
+- **shared event sources**: the InterferenceTrace / ThermalTrace / fault
+  source advance once per tick. The thermal model integrates the **summed**
+  power draw of every active job — the die does not care which job heated
+  it — so one job's downgrade genuinely cools the machine for the others.
+- **arbitrated migration**: each job's SwanController *proposes* ("down" /
+  "up") from its own monitor, but the runtime commits at most one downgrade
+  per tick — to the job that relinquishes the most contended resource per
+  unit of goodput lost (priority-weighted, :meth:`SocJob.relinquish_score`)
+  — instead of every pressured controller thrashing down independently.
+  Upgrades are also serialized (one per tick) so re-adding power cannot
+  re-trip the throttle in a single jump.
+- **shared energy budget**: an optional ``core.energy.EnergyLoan`` is
+  charged with the summed draw every tick; once the borrowed energy would
+  push the battery below critical, the runtime walks the hungriest job
+  down-ladder ("energy" migrations) and blocks upgrades until the budget
+  recovers — low battery reorders every ladder toward its low-power end.
+- **merged timeline**: per-job Timelines are merged into one job-tagged
+  runtime timeline (``Timeline.merged``) for benchmarks and tests.
+
+A single-job runtime reduces exactly to the old TrainSession loop —
+``TrainSession.run`` is now a thin wrapper that builds one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+from repro.engine.jobs import SocJob
+from repro.engine.timeline import Timeline
+
+
+@dataclasses.dataclass
+class RuntimeResult:
+    timeline: Timeline  # merged, job-tagged
+    ticks: int
+    work: Dict[str, float]  # goodput units per job
+    virtual_time_s: float  # sum over ticks of the slowest job's observed time
+    jobs: Dict[str, SocJob] = dataclasses.field(default_factory=dict)
+
+    def summary(self) -> dict:
+        return {"ticks": self.ticks,
+                "virtual_time_s": round(self.virtual_time_s, 6),
+                "work": {k: round(v, 4) for k, v in self.work.items()},
+                "timeline": self.timeline.summary()}
+
+
+class SwanRuntime:
+    def __init__(self, jobs: Sequence[SocJob], *, trace=None,
+                 elastic=None, fault_events=None,
+                 energy=None, battery_level: float = 1.0,
+                 energy_unit_j: float = 1.0,
+                 verbose: bool = False):
+        if not jobs:
+            raise ValueError("need at least one job")
+        names = [j.name for j in jobs]
+        if len(set(names)) != len(names):
+            raise ValueError(f"job names must be unique, got {names}")
+        self.jobs = list(jobs)
+        self.trace = trace
+        self.elastic = elastic
+        self.fault_events = fault_events
+        self.energy = energy  # core.energy.EnergyLoan (shared battery)
+        self.battery_level = float(battery_level)
+        self.energy_unit_j = float(energy_unit_j)  # joules per power unit/tick
+        self.verbose = verbose
+        self.work: Dict[str, float] = {j.name: 0.0 for j in self.jobs}
+        self.virtual_time_s = 0.0
+        self.ticks = 0
+
+    # -- shared event sources ------------------------------------------------
+    def _advance_trace(self, tick: int, total_power: float) -> None:
+        """Advance the shared trace one tick under the summed active-job
+        power draw. ThermalTrace advances at most once per distinct step and
+        heats with the *first* call's sensitivity — this call — so the die
+        temperature integrates everything running, not any one job's view;
+        per-job reads afterwards (:meth:`_slowdown_for`, same tick) only
+        scale the throttle by each job's own sensitivity. InterferenceTrace
+        is stateless so this is a no-op read."""
+        if self.trace is not None:
+            self.trace.effective_slowdown(tick, total_power)
+
+    def _slowdown_for(self, tick: int, sensitivity: float) -> float:
+        if self.trace is None:
+            return 1.0
+        return self.trace.effective_slowdown(tick, sensitivity)
+
+    # -- energy --------------------------------------------------------------
+    def _account_energy(self, tick: int, total_power: float,
+                        active: List[SocJob]) -> Tuple[bool, bool]:
+        """Charge this tick's draw to the shared EnergyLoan. Returns
+        (pressed, downgraded): while the borrowed energy would push the
+        battery below critical, upgrades are blocked and the hungriest job
+        walks one rung toward the low-power end per tick until the ladders
+        bottom out — that walk-down also consumes the tick's one-downgrade
+        allowance."""
+        if self.energy is None:
+            return False, False
+        self.energy.borrow(total_power * self.energy_unit_j)
+        if self.energy.available(self.battery_level):
+            return False, False
+        cands = [j for j in active if j.can_downgrade()]
+        if cands:
+            hungriest = max(cands, key=lambda j: j.power_draw())
+            self._commit(hungriest, "down", "energy", tick)
+        return True, bool(cands)
+
+    # -- arbitration ---------------------------------------------------------
+    def _arbitrate(self, tick: int, active: List[SocJob],
+                   proposals: List[Tuple[SocJob, str]],
+                   allow_upgrades: bool = True,
+                   allow_downgrades: bool = True) -> None:
+        downs = [j for j, p in proposals if p == "down"]
+        if downs:
+            if not allow_downgrades:
+                return  # this tick's downgrade allowance is already spent
+            # contention somewhere on the die: downgrade the ONE job whose
+            # next rung relinquishes the most contended resource per unit of
+            # goodput lost — not necessarily the job whose monitor fired
+            cands = [j for j in active if j.can_downgrade()]
+            if cands:
+                best = max(cands, key=lambda j: j.relinquish_score())
+                reason = "interference" if best in downs else "arbitration"
+                self._commit(best, "down", reason, tick)
+            return
+        if not allow_upgrades:
+            return
+        ups = [j for j, p in proposals if p == "up"]
+        if ups:
+            best = max(ups, key=lambda j: j.priority)
+            self._commit(best, "up", "clear", tick)
+
+    def _commit(self, job: SocJob, direction: str, reason: str,
+                tick: int) -> None:
+        rec = job.migrate(direction, reason, tick)
+        if rec is not None and self.verbose:
+            print(f"[swan] tick {tick}: {job.name} {rec.from_rung} -> "
+                  f"{rec.to_rung} ({reason})")
+
+    # -- the loop ------------------------------------------------------------
+    def run(self, until: int, *, start: int = 0) -> RuntimeResult:
+        """Run ticks ``start .. until-1`` (stopping early once every job is
+        done). One tick = one scheduling quantum for every active job."""
+        for job in self.jobs:
+            job.prepare()
+        for tick in range(start, until):
+            active = [j for j in self.jobs if not j.done]
+            if not active:
+                break
+            # 1. hard events: device loss on the shared pool
+            if self.fault_events is not None and self.elastic is not None:
+                failed = tuple(self.fault_events(
+                    tick, self.elastic.healthy_ids()))
+                if failed:
+                    self.elastic.mark_failed(failed)
+                    for job in active:
+                        job.on_device_loss(tick, failed)
+            # 2. shared event sources tick once, under the summed draw
+            total_power = sum(j.power_draw() for j in active)
+            self._advance_trace(tick, total_power)
+            # 3. energy budget
+            energy_pressed, energy_walked = self._account_energy(
+                tick, total_power, active)
+            # 4. one quantum per job; collect monitor proposals
+            proposals: List[Tuple[SocJob, str]] = []
+            tick_times: List[float] = []
+            for job in active:
+                report = job.step(tick)
+                prop = job.observe(tick, report,
+                                   self._slowdown_for(tick, job.sensitivity()))
+                self.work[job.name] += report.work
+                tick_times.append(report.observed_s if report.observed_s
+                                  is not None else report.latency_s)
+                if prop is not None:
+                    proposals.append((job, prop))
+            if tick_times:
+                # jobs share the tick; its virtual duration is the slowest
+                self.virtual_time_s += max(tick_times)
+            # 5. arbitrated migration (at most one down, one up per tick —
+            # an energy walk-down counts as the tick's downgrade)
+            self._arbitrate(tick, active, proposals,
+                            allow_upgrades=not energy_pressed,
+                            allow_downgrades=not energy_walked)
+            for job in active:
+                job.end_tick(tick)
+            self.ticks += 1
+        for job in self.jobs:
+            job.finalize()
+        return self.result()
+
+    def result(self) -> RuntimeResult:
+        merged = Timeline.merged({j.name: j.timeline for j in self.jobs})
+        return RuntimeResult(timeline=merged, ticks=self.ticks,
+                             work=dict(self.work),
+                             virtual_time_s=self.virtual_time_s,
+                             jobs={j.name: j for j in self.jobs})

@@ -1,12 +1,17 @@
 """TrainSession: the live migration loop (paper Fig. 4b, runnable).
 
-The session owns the training state and an event loop that, per step:
+The session owns the training state and implements the :class:`SocJob`
+protocol (engine/jobs.py); its old private event loop is now the single-job
+special case of :class:`engine.runtime.SwanRuntime` — ``run()`` builds a
+one-job runtime, so training standalone and training under multi-job
+arbitration execute the exact same code. Per quantum the job:
 
-1. applies device-loss events (ElasticController.mark_failed +
+1. applies device-loss events pushed by the runtime (``on_device_loss``:
    SwanController.force_downgrade + mandatory remesh),
-2. executes the active Rung's cached jitted step,
-3. feeds the observed latency to SwanController, and
-4. applies any migration decision *without restarting*:
+2. executes the active Rung's cached jitted step (``step``),
+3. digests the observed latency and lets its SwanController *propose* a
+   migration (``observe``) — the runtime arbitrates across co-tenant jobs,
+4. applies a committed migration *without restarting* (``migrate``):
    - same-mesh migrations (microbatch / kernel / dtype) carry state over in
      place, casting parameters with launch.steps.cast_params when the dtype
      changes;
@@ -27,7 +32,7 @@ from __future__ import annotations
 import dataclasses
 import tempfile
 import time
-from typing import Any, Callable, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -37,8 +42,9 @@ from repro.checkpoint.manager import CheckpointManager, shard_restore
 from repro.compat import set_mesh
 from repro.core.controller import SwanController
 from repro.engine.events import InterferenceTrace
+from repro.engine.jobs import SocJob, StepReport
 from repro.engine.rungs import Rung
-from repro.engine.timeline import Timeline
+from repro.engine.timeline import MigrationRecord, Timeline
 from repro.launch.steps import cast_params, init_train_state
 from repro.runtime.elastic import ElasticController
 
@@ -52,7 +58,7 @@ class SessionResult:
     controller: Optional[SwanController] = None
 
 
-class TrainSession:
+class TrainSession(SocJob):
     def __init__(self, cfg, rungs: Sequence[Rung], *, optimizer, batch_fn,
                  lr: float = 0.05, compressor=None,
                  ckpt: Optional[CheckpointManager] = None, ckpt_every: int = 0,
@@ -61,7 +67,8 @@ class TrainSession:
                  trace: Optional[InterferenceTrace] = None,
                  adaptive: bool = True, upgrade_patience: int = 5,
                  latency_fn: Optional[Callable] = None,
-                 log_every: int = 0, verbose: bool = True):
+                 log_every: int = 0, verbose: bool = True,
+                 name: str = "train", priority: float = 1.0):
         if not rungs:
             raise ValueError("need at least one rung")
         if latency_fn is not None and any(
@@ -69,7 +76,7 @@ class TrainSession:
             raise ValueError("latency_fn mode needs latency_estimate_s on "
                              "every rung (observations are compared to them)")
         self.cfg = cfg
-        self.rungs = list(rungs)
+        self._rungs = list(rungs)
         self.optimizer = optimizer
         self.batch_fn = batch_fn
         self.lr = lr
@@ -79,29 +86,47 @@ class TrainSession:
         self.elastic = elastic
         self.fault_events = fault_events
         self.trace = trace
-        self.adaptive = adaptive and len(self.rungs) > 1
+        self.adaptive = adaptive and len(self._rungs) > 1
         self.latency_fn = latency_fn
         self.log_every = log_every
         self.verbose = verbose
+        self.name = name
+        self.priority = float(priority)
 
-        n = len(self.rungs)
-        profiles = [r.profile(position=i, n=n) for i, r in enumerate(self.rungs)]
+        n = len(self._rungs)
+        profiles = [r.profile(position=i, n=n)
+                    for i, r in enumerate(self._rungs)]
         self.ctl = SwanController(profiles, upgrade_patience=upgrade_patience)
+        self.controller = self.ctl  # SocJob protocol name (same object)
         self.timeline = Timeline()
-        self._expected: dict = {}  # rung name -> calibrated clean latency
+        self._expected: Dict[str, float] = {}  # rung name -> clean latency
         if latency_fn is not None:
-            for r in self.rungs:
+            for r in self._rungs:
                 self._expected[r.name] = r.latency_estimate_s
         self._steps_on_rung = 0
         self._mesh = None
         self._mesh_key = None
         self._migrate_ckpt: Optional[CheckpointManager] = None
         self._migrate_tmpdir = None
+        # job binding (set by bind()/run())
+        self._until: Optional[int] = None
+        self._step_idx = 0
+        self._losses: List[float] = []
+        self._state = None
+        self._init_state = None
+        self._rng_seed = 0
+        self._prepared = False
+        self._last_dt = 0.0
+        self._last_rung_name = self.rung.name
+        self._ran_tick = None  # last tick whose step() already executed
 
     # -- rung / mesh plumbing ----------------------------------------------
+    def rungs(self) -> Sequence[Rung]:
+        return self._rungs
+
     @property
     def rung(self) -> Rung:
-        return self.rungs[self.ctl.idx]
+        return self._rungs[self.ctl.idx]
 
     def _mesh_for(self, rung: Rung):
         if self.elastic is not None:
@@ -162,7 +187,7 @@ class TrainSession:
             _, state = mgr.restore(completed)
             state = jax.tree_util.tree_map(
                 lambda a: jnp.asarray(a) if hasattr(a, "dtype") else a, state)
-        for r in self.rungs:
+        for r in self._rungs:
             r.invalidate()
         self._mesh = new_mesh
         self._mesh_key = self._mesh_fingerprint(new_mesh)
@@ -188,15 +213,7 @@ class TrainSession:
             state = dict(state)
             state["params"] = cast_params(state["params"], to_rung.dtype)
         cost_s = time.perf_counter() - t0
-        expected = self._expected.get(to_rung.name)
-        # re-anchor the monitor: prefer the rung's own calibration, else
-        # scale the departing rung's by the ladder's relative latencies
-        if expected is None:
-            base = self._expected.get(from_rung.name)
-            if base is not None and from_rung.rel_latency > 0:
-                expected = base * (to_rung.rel_latency / from_rung.rel_latency)
-        if expected is not None:
-            self.ctl.calibrate(expected)
+        expected = self._recalibrate(from_rung, to_rung)
         cost_steps = 0
         if kind == "remesh":
             cost_steps = max(1, int(round(cost_s / expected))) \
@@ -211,23 +228,36 @@ class TrainSession:
                   f"{to_rung.name} ({reason}, {kind})")
         return state, rec
 
-    def _sync_rung(self, step: int, state, prev_idx: int, completed: int):
-        if self.ctl.idx == prev_idx:
-            return state
-        state, _ = self._apply_migration(
-            step, state, self.rungs[prev_idx],
-            self.ctl.migrations[-1].reason, completed)
-        return state
+    # -- SocJob surface ------------------------------------------------------
+    def bind(self, until: int, *, start: int = 0, state=None,
+             rng_seed: int = 0) -> "TrainSession":
+        """Set this job's work target before handing it to a SwanRuntime.
+        ``run()`` does this implicitly for the standalone path."""
+        self._until = until
+        self._step_idx = start
+        self._losses = []
+        self._init_state = state
+        self._rng_seed = rng_seed
+        self._prepared = False
+        return self
 
-    # -- event loop --------------------------------------------------------
-    def run(self, steps: int, *, start: int = 0, state=None,
-            rng_seed: int = 0) -> SessionResult:
+    @property
+    def done(self) -> bool:
+        return self._prepared and self._step_idx >= self._until
+
+    def prepare(self) -> None:
+        if self._prepared:
+            return
+        if self._until is None:
+            raise RuntimeError("TrainSession must be bind()-ed (or run via "
+                               "run()) before a runtime can step it")
         self._mesh = self._mesh_for(self.rung)
         self._mesh_key = self._mesh_fingerprint(self._mesh)
+        state = self._init_state
         if state is None:
             model = self.rung.build_model(self.cfg)
             state = init_train_state(model, self.optimizer,
-                                     jax.random.PRNGKey(rng_seed),
+                                     jax.random.PRNGKey(self._rng_seed),
                                      compressor=self.compressor)
         else:
             # a resumed checkpoint may have been written on any rung (e.g.
@@ -237,93 +267,122 @@ class TrainSession:
             state["params"] = cast_params(state["params"], self.rung.dtype)
         if self._mesh is not None:
             host = jax.tree_util.tree_map(
-                lambda a: jax.device_get(a) if hasattr(a, "dtype") else a, state)
+                lambda a: jax.device_get(a) if hasattr(a, "dtype") else a,
+                state)
             state = shard_restore(host, self._mesh)
         else:
             state = jax.tree_util.tree_map(
                 lambda a: jnp.asarray(a) if hasattr(a, "dtype") else a, state)
+        self._state = state
+        self._prepared = True
 
-        losses: List[float] = []
-        for step in range(start, steps):
-            # 1. hard events: device loss forces a downgrade + remesh
-            if self.fault_events is not None and self.elastic is not None:
-                failed = tuple(self.fault_events(step, self.elastic.healthy_ids()))
-                if failed:
-                    self.elastic.mark_failed(failed)
-                    prev = self.ctl.idx
-                    self.ctl.force_downgrade("device-loss")
-                    if self.ctl.idx != prev:
-                        # the step hasn't run yet: only `step` steps finished
-                        state = self._sync_rung(step, state, prev,
-                                                completed=step)
-                    new_mesh = self._mesh_for(self.rung)
-                    if self._mesh_fingerprint(new_mesh) != self._mesh_key:
-                        # no rung change (ladder bottom) but a lost device
-                        # may hold shards: remesh is still mandatory
-                        t0 = time.perf_counter()
-                        state = self._remesh(step, state, new_mesh)
-                        self.timeline.record_migration(
-                            step=step, from_rung=self.rung.name,
-                            to_rung=self.rung.name, reason="device-loss",
-                            kind="remesh",
-                            cost_s=round(time.perf_counter() - t0, 6),
-                            cost_steps=1)
-                        self._steps_on_rung = 0
-
-            # 2. execute one step on the active rung
-            rung = self.rung
+    def on_device_loss(self, tick: int, failed: Sequence[int]) -> None:
+        """Device loss forces a downgrade + remesh (the runtime already
+        marked the shared pool)."""
+        if self.elastic is None:
+            return
+        step = self._step_idx
+        prev = self.ctl.idx
+        self.ctl.force_downgrade("device-loss")
+        if self.ctl.idx != prev:
+            # the step hasn't run yet: only `step` steps finished
+            self._state, _ = self._apply_migration(
+                step, self._state, self._rungs[prev], "device-loss",
+                completed=step)
+        new_mesh = self._mesh_for(self.rung)
+        if self._mesh_fingerprint(new_mesh) != self._mesh_key:
+            # no rung change (ladder bottom) but a lost device may hold
+            # shards: remesh is still mandatory
             t0 = time.perf_counter()
-            state, metrics = self._run_step(state, self.batch_fn(step))
-            loss = float(metrics["loss"])  # blocks until the step is done
-            dt = time.perf_counter() - t0
-            warmup = self._steps_on_rung == 0
-            self._steps_on_rung += 1
+            self._state = self._remesh(step, self._state, new_mesh)
+            self.timeline.record_migration(
+                step=step, from_rung=self.rung.name, to_rung=self.rung.name,
+                reason="device-loss", kind="remesh",
+                cost_s=round(time.perf_counter() - t0, 6), cost_steps=1)
+            self._steps_on_rung = 0
 
-            # 3. what the monitor sees
-            if self.latency_fn is not None:
-                observed = float(self.latency_fn(step, rung, dt))
-            elif self.trace is not None:
-                observed = dt * self.trace.effective_slowdown(
-                    step, rung.interference_sensitivity)
-            else:
-                observed = dt
-            losses.append(loss)
-            self.timeline.record_step(step=step, rung=rung.name,
-                                      latency_s=round(dt, 6),
-                                      observed_s=round(observed, 6),
-                                      loss=loss, warmup=warmup)
+    def step(self, tick: int) -> StepReport:
+        step = self._step_idx
+        rung = self.rung
+        self._ran_tick = tick
+        batch = self.batch_fn(step)
+        t0 = time.perf_counter()
+        self._state, metrics = self._run_step(self._state, batch)
+        loss = float(metrics["loss"])  # blocks until the step is done
+        dt = time.perf_counter() - t0
+        warmup = self._steps_on_rung == 0
+        self._steps_on_rung += 1
+        self._losses.append(loss)
+        self._last_dt = dt
+        self._last_rung_name = rung.name
+        leaves = jax.tree_util.tree_leaves(batch)
+        work = float(leaves[0].shape[0]) if leaves else 1.0  # samples
+        return StepReport(latency_s=dt, work=work, loss=loss, warmup=warmup)
 
-            # 4. adapt
-            if self.adaptive:
-                feed = True
-                if self.latency_fn is None:
-                    if warmup:
-                        feed = False  # first step on a rung pays compile
-                    elif rung.name not in self._expected:
-                        # calibrate this rung's clean latency from the wall
-                        # measurement. Synthetic traces never slow the actual
-                        # machine, so dt is clean even mid-burst; under real
-                        # interference (no trace) a rung first visited while
-                        # pressured calibrates high, which only delays
-                        # detection until the post-clear upgrade re-visits it
-                        self._expected[rung.name] = dt
-                        self.ctl.calibrate(dt)
-                if feed:
-                    prev = self.ctl.idx
-                    self.ctl.observe_step(observed)
-                    state = self._sync_rung(step, state, prev,
-                                            completed=step + 1)
+    def observe(self, tick: int, report: StepReport,
+                slowdown: float) -> Optional[str]:
+        step = self._step_idx
+        rung = self.rung
+        dt = report.latency_s
+        # what the monitor sees
+        if self.latency_fn is not None:
+            observed = float(self.latency_fn(step, rung, dt))
+        else:
+            observed = dt * slowdown
+        report.observed_s = observed
+        self.timeline.record_step(step=step, rung=rung.name,
+                                  latency_s=round(dt, 6),
+                                  observed_s=round(observed, 6),
+                                  loss=report.loss, warmup=report.warmup,
+                                  work=report.work)
+        return self._monitor_proposal(report, rung, dt, observed)
 
-            if self.log_every and (step % self.log_every == 0
-                                   or step == steps - 1):
-                print(f"step {step:5d} loss {loss:8.4f} ({dt * 1e3:.0f} ms) "
-                      f"[{rung.name}]")
-            if self.ckpt is not None and self.ckpt_every and \
-                    (step + 1) % self.ckpt_every == 0:
-                self.ckpt.save(step + 1, state)
+    def migrate(self, direction: str, reason: str,
+                tick: int) -> Optional[MigrationRecord]:
+        prev = self.ctl.idx
+        self.ctl.commit(direction, reason)
+        if self.ctl.idx == prev:
+            return None
+        # post-observation migrations land after this tick's step (step + 1
+        # finished); a pre-step commit (the runtime's energy walk-down) must
+        # not label the remesh checkpoint with work that hasn't happened
+        ran = self._ran_tick == tick
+        self._state, rec = self._apply_migration(
+            self._step_idx, self._state, self._rungs[prev], reason,
+            completed=self._step_idx + (1 if ran else 0))
+        return rec
 
-        if self.ckpt is not None and losses:
-            self.ckpt.save(steps, state)
-        return SessionResult(losses=losses, timeline=self.timeline,
-                             state=state, final_rung=self.rung.name,
+    def end_tick(self, tick: int) -> None:
+        step = self._step_idx
+        if self.log_every and (step % self.log_every == 0
+                               or step == self._until - 1):
+            print(f"step {step:5d} loss {self._losses[-1]:8.4f} "
+                  f"({self._last_dt * 1e3:.0f} ms) [{self._last_rung_name}]")
+        if self.ckpt is not None and self.ckpt_every and \
+                (step + 1) % self.ckpt_every == 0:
+            self.ckpt.save(step + 1, self._state)
+        self._step_idx = step + 1
+
+    def finalize(self) -> None:
+        if self.ckpt is not None and self._losses:
+            self.ckpt.save(self._step_idx, self._state)
+
+    def result(self) -> SessionResult:
+        return SessionResult(losses=self._losses, timeline=self.timeline,
+                             state=self._state, final_rung=self.rung.name,
                              controller=self.ctl)
+
+    # -- standalone entry point ---------------------------------------------
+    def run(self, steps: int, *, start: int = 0, state=None,
+            rng_seed: int = 0) -> SessionResult:
+        """Train standalone: a single-job SwanRuntime over this session.
+        The loop structure is the old event loop's; the one behavioral
+        change riding along is the controller's post-migration sample skip
+        (migrate -> no bounce), which can shift migration steps by one
+        versus pre-SocRuntime timelines."""
+        from repro.engine.runtime import SwanRuntime
+        self.bind(steps, start=start, state=state, rng_seed=rng_seed)
+        rt = SwanRuntime([self], trace=self.trace, elastic=self.elastic,
+                         fault_events=self.fault_events)
+        rt.run(steps, start=start)
+        return self.result()

@@ -17,10 +17,11 @@ class MigrationRecord:
     step: int
     from_rung: str
     to_rung: str
-    reason: str  # "interference" | "clear" | "device-loss" | ...
+    reason: str  # "interference" | "clear" | "device-loss" | "energy" | ...
     kind: str  # "in-place" (state carried over) | "remesh" (ckpt round-trip)
     cost_s: float = 0.0
     cost_steps: int = 0  # migration stall expressed in expected step times
+    job: str = ""  # owning SocJob in a merged multi-job runtime timeline
 
 
 @dataclasses.dataclass
@@ -31,6 +32,8 @@ class StepRecord:
     observed_s: float  # latency fed to the interference monitor
     loss: float
     warmup: bool = False  # first step on a rung (includes compile)
+    work: float = 0.0  # goodput units this step (samples trained / tokens out)
+    job: str = ""  # owning SocJob in a merged multi-job runtime timeline
 
 
 class Timeline:
@@ -47,6 +50,36 @@ class Timeline:
         rec = StepRecord(**kw)
         self.steps.append(rec)
         return rec
+
+    # -- merging (multi-job runtimes) ---------------------------------------
+    @classmethod
+    def merged(cls, tagged: dict) -> "Timeline":
+        """Merge per-job timelines ({job_name: Timeline}) into one runtime
+        timeline, tagging every record with its owning job and interleaving
+        by step index."""
+        out = cls()
+        for name, tl in tagged.items():
+            for s in tl.steps:
+                out.steps.append(dataclasses.replace(s, job=name))
+            for m in tl.migrations:
+                out.migrations.append(dataclasses.replace(m, job=name))
+        out.steps.sort(key=lambda s: (s.step, s.job))
+        out.migrations.sort(key=lambda m: (m.step, m.job))
+        return out
+
+    def for_job(self, job: str) -> "Timeline":
+        """Single-job view of a merged timeline."""
+        out = Timeline()
+        out.steps = [s for s in self.steps if s.job == job]
+        out.migrations = [m for m in self.migrations if m.job == job]
+        return out
+
+    def jobs(self) -> List[str]:
+        seen: List[str] = []
+        for r in list(self.steps) + list(self.migrations):
+            if r.job and r.job not in seen:
+                seen.append(r.job)
+        return seen
 
     # -- views -------------------------------------------------------------
     def step_times(self, *, observed: bool = False) -> List[float]:
@@ -65,7 +98,7 @@ class Timeline:
                     if m.reason != "clear" and m.from_rung != m.to_rung)
         ups = sum(1 for m in self.migrations if m.reason == "clear")
         steady = [s.latency_s for s in self.steps if not s.warmup]
-        return {
+        out = {
             "n_steps": len(self.steps),
             "n_migrations": len(self.migrations),
             "downgrades": downs,
@@ -76,6 +109,14 @@ class Timeline:
             "migration_cost_steps": sum(m.cost_steps for m in self.migrations),
             "mean_step_s": (sum(steady) / len(steady)) if steady else 0.0,
         }
+        jobs = self.jobs()
+        if jobs:  # merged multi-job timeline: per-job breakdown rides along
+            out["jobs"] = {
+                j: {"steps": sum(1 for s in self.steps if s.job == j),
+                    "work": round(sum(s.work for s in self.steps if s.job == j), 4),
+                    "migrations": sum(1 for m in self.migrations if m.job == j)}
+                for j in jobs}
+        return out
 
     # -- serialization -----------------------------------------------------
     def to_json(self) -> dict:

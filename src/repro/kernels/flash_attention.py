@@ -401,6 +401,14 @@ def flash_attention_mha(q, k, v, *, causal: bool = True, q_offset: int = 0,
     ``interpret`` and ``lowp`` (bf16 dot inputs, REPRO_ATTN_BF16) resolve
     eagerly here — outside any jit — so env flips take effect per call.
     """
+    if q.shape[-1] != k.shape[-1] or q.shape[-1] != v.shape[-1]:
+        # MLA prefill has qk_dim != v_dim; the tiled kernel assumes one head
+        # dim throughout, so a mismatch silently produces garbage — refuse
+        # loudly instead (models.attention.mla_forward falls back to chunked)
+        raise ValueError(
+            f"flash_attention_mha needs matching q/k/v head dims, got "
+            f"q={q.shape[-1]} k={k.shape[-1]} v={v.shape[-1]}; use the "
+            f"'chunked' impl for asymmetric-head attention (e.g. MLA prefill)")
     _, _, Sq, _ = q.shape
     Sk = k.shape[2]
     bq = divisor_block(Sq, block_q)

@@ -109,6 +109,11 @@ class ContinuousBatchingEngine:
         self.kv_layout = kv_layout
         self.block_size = block_size
         self.bucket_prompts = bucket_prompts
+        # serving-rung knobs (engine.jobs.ServeJob migrates these live);
+        # the as-built settings are what a None override restores
+        self.slot_cap: Optional[int] = None
+        self._base_model = model
+        self._base_cache_dtype = jnp.dtype(cache_dtype)
 
         self.cache_len = np.zeros(max_batch, np.int32)
         self.tokens = np.zeros((max_batch, 1), np.int32)
@@ -284,11 +289,66 @@ class ContinuousBatchingEngine:
         # cache_len stays frozen: the stale KV keeps idle-slot math
         # well-defined and is overwritten by the next admission's splice
 
+    # -- serving-rung knobs (live-migratable; see engine.jobs.ServeJob) -----
+
+    def set_slot_cap(self, cap: Optional[int]) -> None:
+        """Cap concurrently-resident requests (decode microbatch cap).
+
+        Takes effect at admission: resident sequences above a lowered cap
+        keep streaming and the population shrinks as they retire — no
+        request is ever evicted mid-decode. ``None`` removes the cap."""
+        self.slot_cap = None if cap is None else max(1, int(cap))
+
+    def set_kv_dtype(self, dtype=None) -> None:
+        """Cast the live KV cache (``None`` restores the as-built dtype).
+
+        Halving cache bytes (bf16) halves the bandwidth every decode step
+        streams — the serving analogue of a bf16 training rung. Lossy on
+        the way down: re-upcasting does not recover the rounded bits."""
+        if isinstance(dtype, str):
+            dtype = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+                     "float16": jnp.float16}[dtype]
+        dtype = self._base_cache_dtype if dtype is None else jnp.dtype(dtype)
+        leaves = jax.tree_util.tree_leaves(self.cache)
+        if not leaves or all(a.dtype == dtype for a in leaves):
+            return
+        self.cache = jax.tree_util.tree_map(
+            lambda a: a.astype(dtype), self.cache)
+
+    def set_attn_impl(self, impl: Optional[str]) -> None:
+        """Rebuild the decode/prefill callables under a different attention
+        impl (``None`` restores the as-built model). Params, cache and all
+        slot bookkeeping carry over — only the compiled steps change."""
+        if impl == getattr(self, "_attn_impl_override", None):
+            return
+        self._attn_impl_override = impl
+        if impl is None:
+            model = self._base_model
+        else:
+            # rebuild from the as-built model's own kwargs so only the
+            # attention impl changes (chunk/remat/dtype/moe_cf carry over)
+            from repro.models.registry import rebuild_model
+            model = rebuild_model(self._base_model, impl=impl)
+        if model is self.model:
+            return
+        self.model = model
+        self._prefill = jax.jit(model.prefill)
+        if self.kv is not None:
+            self._decode = build_paged_decode_step(
+                model, greedy=self._sampler is None)
+        else:
+            self._decode = build_decode_step(model,
+                                             greedy=self._sampler is None)
+
     # -- stepping ----------------------------------------------------------
 
     def _admit_waiting(self) -> None:
         for slot in range(self.max_batch):
             if not self.queue:
+                return
+            if self.slot_cap is not None and \
+                    sum(1 for u in self.slot_uid if u is not None) >= \
+                    self.slot_cap:
                 return
             if self.slot_uid[slot] is None:
                 if self.kv is not None:

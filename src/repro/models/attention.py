@@ -357,6 +357,8 @@ def gqa_decode_paged(p, x, cache, cache_len, block_table, cfg, *,
 # MLA (deepseek-v3): latent KV cache; decode uses the absorbed form
 # ---------------------------------------------------------------------------
 
+_MLA_PALLAS_WARNED = False  # one-time impl-fallback warning (mla_forward)
+
 
 def _mla_qkv(p, x, cfg, positions):
     B, S, _ = x.shape
@@ -376,6 +378,21 @@ def _mla_qkv(p, x, cfg, positions):
 def mla_forward(p, x, cfg, *, positions, impl="chunked", chunk=1024, return_cache=False):
     B, S, _ = x.shape
     nope, v_dim = cfg.qk_nope_head_dim, cfg.v_head_dim
+    if impl == "pallas" and nope + cfg.qk_rope_head_dim != v_dim:
+        # the fused MHA kernel assumes one head dim for q/k/v; MLA's qk dim
+        # (nope + rope) differs from v_dim, so route prefill/training through
+        # the chunked online-softmax path instead of producing garbage.
+        # (MLA *decode* has its own latent-space pallas kernel and is fine.)
+        import warnings
+        global _MLA_PALLAS_WARNED
+        if not _MLA_PALLAS_WARNED:
+            _MLA_PALLAS_WARNED = True
+            warnings.warn(
+                f"MLA prefill cannot use impl='pallas' (qk head dim "
+                f"{nope + cfg.qk_rope_head_dim} != v head dim {v_dim}); "
+                f"falling back to 'chunked'. Decode still uses the fused "
+                f"latent-space kernel.", RuntimeWarning, stacklevel=2)
+        impl = "chunked"
     q_nope, q_rope, latent, k_rope = _mla_qkv(p, x, cfg, positions)
     kv = (latent @ p["wkv_b"]).reshape(B, S, cfg.n_heads, nope + v_dim)
     k_nope, v = kv[..., :nope], kv[..., nope:]

@@ -27,11 +27,23 @@ class Model:
     # paged KV layout (dense/moe only): pools + block tables instead of slabs
     init_paged_cache: Optional[Callable] = None  # (num_blocks, block_size, dtype) -> pools
     paged_decode_step: Optional[Callable] = None  # (params, pools, tokens, cache_len, block_table) -> (logits, pools)
+    # the exact build_model kwargs this model was constructed with, so a
+    # single-knob rebuild (e.g. serve.set_attn_impl) preserves the rest
+    build_kwargs: dict = dataclasses.field(default_factory=dict)
+
+
+def rebuild_model(model: "Model", **overrides) -> "Model":
+    """Rebuild a model changing only the given build_model kwargs."""
+    kw = dict(model.build_kwargs)
+    kw.update(overrides)
+    return build_model(model.cfg, **kw)
 
 
 def build_model(cfg: ModelConfig, *, impl: str = "chunked", chunk: int = 1024,
                 remat: str = "none", param_dtype=jnp.float32,
                 moe_cf: float = 1.25) -> Model:
+    kw = dict(impl=impl, chunk=chunk, remat=remat, param_dtype=param_dtype,
+              moe_cf=moe_cf)
     if cfg.family == "cnn":
         return Model(
             cfg=cfg,
@@ -40,6 +52,7 @@ def build_model(cfg: ModelConfig, *, impl: str = "chunked", chunk: int = 1024,
                                                  impl="pallas" if impl == "pallas" else "jnp"),
             loss=lambda p, b: cnn.loss_cnn(p, cfg, b,
                                            impl="pallas" if impl == "pallas" else "jnp"),
+            build_kwargs=kw,
         )
 
     if cfg.family == "encdec":
@@ -56,6 +69,7 @@ def build_model(cfg: ModelConfig, *, impl: str = "chunked", chunk: int = 1024,
                 cfg, batch, max_len, dtype),
             decode_step=lambda p, cache, tokens, cache_len: encdec.decode_step_encdec(
                 p, cfg, cache, tokens, cache_len),
+            build_kwargs=kw,
         )
 
     def fwd(p, b):
@@ -89,4 +103,5 @@ def build_model(cfg: ModelConfig, *, impl: str = "chunked", chunk: int = 1024,
                                              impl=impl, moe_cf=moe_cf,
                                              block_table=block_table))
             if cfg.family in ("dense", "moe") else None),
+        build_kwargs=kw,
     )

@@ -1,0 +1,465 @@
+"""Shared-SoC arbitration: SwanRuntime over co-tenant SocJobs.
+
+Covers the runtime's closed loop across jobs (summed-power thermals,
+sensitivity-weighted downgrade ordering), device loss mid-co-tenancy (the
+mesh-backed job remeshes, serving keeps streaming), merged-timeline tag
+integrity, ServeJob rung-migration token parity, the energy budget, and the
+controller's post-migration no-bounce regression.
+"""
+import json
+import os
+import subprocess
+import sys
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.controller import SwanController
+from repro.core.cost import ChoiceProfile
+from repro.core.energy import EnergyLoan
+from repro.engine.events import InterferenceTrace, ThermalTrace
+from repro.engine.jobs import (ServeJob, ServeRung,
+                              default_serve_ladder, trace_latency_fn)
+from repro.engine.runtime import SwanRuntime
+from repro.engine.rungs import default_rung_ladder
+from repro.engine.session import TrainSession
+from repro.engine.timeline import Timeline
+from repro.launch.serve import ContinuousBatchingEngine, Request
+from repro.launch.train import make_batch_fn
+from repro.models.registry import build_model
+from repro.optim.optimizers import sgd
+
+TINY = ModelConfig(name="arb-tiny", family="dense", n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                   tie_embeddings=True, source="tests/test_arbitration.py")
+KEY = jax.random.PRNGKey(0)
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _train_job(trace, ticks, *, sens=None, rel=None, name="train",
+               priority=1.0, patience=4):
+    rungs = default_rung_ladder(batch=8, microbatch=1, attn_impl="naive")
+    if sens is not None:
+        rungs = rungs[:len(sens)]
+        for r, s in zip(rungs, sens):
+            r.interference_sensitivity = s
+    if rel is not None:
+        for r, rl in zip(rungs, rel):
+            r.rel_latency = rl
+    for r in rungs:
+        r.latency_estimate_s = 0.1 * r.rel_latency
+    ses = TrainSession(TINY, rungs, optimizer=sgd(), lr=0.05,
+                       batch_fn=make_batch_fn(TINY, 8, 32),
+                       latency_fn=trace_latency_fn(trace), adaptive=True,
+                       upgrade_patience=patience, verbose=False, name=name,
+                       priority=priority)
+    return ses.bind(ticks)
+
+
+def _serve_rungs(slots, *, sens=(1.0, 0.4), rel=(1.0, 1.5), kv_dtype=None):
+    names = ("serve-full", "serve-capped", "serve-lean")
+    caps = (None, max(1, slots // 2), 1)
+    return [ServeRung(name=names[i], slot_cap=caps[i],
+                      interference_sensitivity=s, rel_latency=r,
+                      latency_estimate_s=0.1 * r,
+                      kv_dtype=kv_dtype if i == len(sens) - 1 else None)
+            for i, (s, r) in enumerate(zip(sens, rel))]
+
+
+def _serve_job(trace, *, slots=2, n_req=8, gen=8, rungs=None, name="serve",
+               priority=1.0, patience=4, adaptive=True, impl="naive"):
+    model = build_model(TINY, impl=impl)
+    params = model.init(KEY)
+    engine = ContinuousBatchingEngine(model, params, max_batch=slots,
+                                      max_seq=48)
+    rng = np.random.default_rng(7)
+    reqs = [Request(uid=i, prompt=rng.integers(0, 64, 5).astype(np.int32),
+                    max_new_tokens=gen) for i in range(n_req)]
+    return ServeJob(engine, reqs,
+                    rungs=rungs or _serve_rungs(slots),
+                    latency_fn=trace_latency_fn(trace), adaptive=adaptive,
+                    upgrade_patience=patience, name=name, priority=priority)
+
+
+# ---------------------------------------------------------------------------
+# controller regression: migrate -> no bounce
+# ---------------------------------------------------------------------------
+
+
+def _profiles(lats):
+    return [ChoiceProfile(choice=f"r{i}", latency_s=l, energy_j=l,
+                          power_w=1.0, cost_key=(len(lats) - i,))
+            for i, l in enumerate(lats)]
+
+
+def test_controller_skips_first_post_migration_sample():
+    """The first sample after a migration carries the compile/remesh tail;
+    feeding it would re-anchor the EWMA on a one-off spike and immediately
+    re-migrate (downgrade bounce). It must be dropped."""
+    ctl = SwanController(_profiles([0.1, 0.15, 0.2]), upgrade_patience=3)
+    for _ in range(3):
+        ctl.observe_step(0.1)
+    ctl.observe_step(0.3)  # genuine interference -> downgrade
+    assert ctl.idx == 1 and len(ctl.migrations) == 1
+    # compile/remesh tail on the new rung: way over trigger, must be ignored
+    ctl.observe_step(10.0)
+    assert ctl.idx == 1 and len(ctl.migrations) == 1, \
+        "post-migration tail sample caused a bounce"
+    # clean steps on the new rung: stays put (and eventually recovers)
+    for _ in range(2):
+        ctl.observe_step(0.15)
+    assert ctl.idx == 1 and len(ctl.migrations) == 1
+
+
+def test_controller_propose_commit_veto_keeps_monitor_state():
+    """A vetoed proposal (arbiter picked another job) migrates nothing and
+    keeps the monitor pressured, so it re-proposes next step."""
+    ctl = SwanController(_profiles([0.1, 0.15]), upgrade_patience=3)
+    ctl.observe_step(0.1)
+    assert ctl.propose(0.4) == "down"
+    assert ctl.idx == 0 and not ctl.migrations  # nothing committed
+    assert ctl.propose(0.4) == "down"  # still pressured
+    ctl.commit("down", "arbitration")
+    assert ctl.idx == 1 and ctl.migrations[-1].reason == "arbitration"
+
+
+# ---------------------------------------------------------------------------
+# two-job thermal arbitration: downgrade order follows sensitivity
+# ---------------------------------------------------------------------------
+
+
+def _thermal():
+    return ThermalTrace(heat_rate=0.4, cool_rate=0.3, slowdown=4.0,
+                        trigger_temp=1.0, release_temp=0.4)
+
+
+def _first_downgrade_job(train_sens, serve_sens, ticks=10):
+    trace = _thermal()
+    # identical rel ladders: the relinquish score differs only through the
+    # sensitivity gap, so the arbiter's pick isolates that term
+    train = _train_job(trace, ticks, sens=train_sens, rel=(1.0, 1.5))
+    serve = _serve_job(trace, rungs=_serve_rungs(2, sens=serve_sens,
+                                                 rel=(1.0, 1.5)),
+                       n_req=12, gen=12)
+    res = SwanRuntime([train, serve], trace=trace).run(ticks)
+    downs = [m for m in res.timeline.migrations if m.reason != "clear"]
+    assert downs, "combined power must trip the shared throttle"
+    return downs[0].job
+
+
+def test_thermal_pressure_downgrades_serve_first_when_more_sensitive():
+    assert _first_downgrade_job((1.0, 0.6), (1.0, 0.2)) == "serve"
+
+
+def test_thermal_pressure_downgrades_train_first_when_more_sensitive():
+    assert _first_downgrade_job((1.0, 0.2), (1.0, 0.6)) == "train"
+
+
+def test_priority_tilts_arbitration():
+    """With symmetric ladders, the lower-priority job is downgraded first."""
+    trace = _thermal()
+    train = _train_job(trace, 10, sens=(1.0, 0.4), rel=(1.0, 1.5),
+                       priority=0.5)
+    serve = _serve_job(trace, rungs=_serve_rungs(2, sens=(1.0, 0.4),
+                                                 rel=(1.0, 1.5)),
+                       n_req=12, gen=12, priority=2.0)
+    res = SwanRuntime([train, serve], trace=trace).run(10)
+    downs = [m for m in res.timeline.migrations if m.reason != "clear"]
+    assert downs and downs[0].job == "train"
+
+
+def test_shared_thermal_integrates_summed_power():
+    """Co-tenancy heats the die faster than either job alone: the combined
+    run throttles (and downgrades) while the single job stays clean."""
+    def run(jobs, trace):
+        return SwanRuntime(jobs, trace=trace).run(12)
+
+    # alone: heat 0.4*1.0 just exceeds cooling; never reaches trigger in 12
+    t_alone = ThermalTrace(heat_rate=0.35, cool_rate=0.3, slowdown=4.0,
+                           trigger_temp=1.0, release_temp=0.4)
+    res_alone = run([_train_job(t_alone, 12)], t_alone)
+    assert not res_alone.timeline.migrations
+
+    t_both = ThermalTrace(heat_rate=0.35, cool_rate=0.3, slowdown=4.0,
+                          trigger_temp=1.0, release_temp=0.4)
+    res_both = run([_train_job(t_both, 12), _serve_job(t_both, n_req=12,
+                                                       gen=12)], t_both)
+    assert res_both.timeline.migrations, \
+        "summed draw of two jobs must trip the throttle one alone does not"
+
+
+# ---------------------------------------------------------------------------
+# merged timeline: tag integrity
+# ---------------------------------------------------------------------------
+
+
+def test_merged_timeline_tags_and_roundtrip(tmp_path):
+    trace = _thermal()
+    train = _train_job(trace, 8)
+    serve = _serve_job(trace, n_req=10, gen=10)
+    res = SwanRuntime([train, serve], trace=trace).run(8)
+    tl = res.timeline
+    assert set(tl.jobs()) == {"train", "serve"}
+    assert all(s.job in ("train", "serve") for s in tl.steps)
+    assert all(m.job in ("train", "serve") for m in tl.migrations)
+    # per-job views partition the merged record set exactly
+    for name, job in (("train", train), ("serve", serve)):
+        view = tl.for_job(name)
+        assert len(view.steps) == len(job.timeline.steps)
+        assert len(view.migrations) == len(job.timeline.migrations)
+        assert [s.step for s in view.steps] == \
+            [s.step for s in job.timeline.steps]
+    assert len(tl.steps) == len(train.timeline.steps) + \
+        len(serve.timeline.steps)
+    # json roundtrip preserves tags and the per-job summary
+    p = str(tmp_path / "merged.json")
+    tl.save(p)
+    with open(p) as f:
+        back = Timeline.from_json(json.load(f))
+    assert set(back.jobs()) == {"train", "serve"}
+    assert back.summary()["jobs"].keys() == tl.summary()["jobs"].keys()
+    assert back.summary() == tl.summary()
+
+
+# ---------------------------------------------------------------------------
+# ServeJob: rung migration is bookkeeping, never math
+# ---------------------------------------------------------------------------
+
+
+def test_serve_rung_migration_token_parity():
+    """A serve stream that migrates down (slot cap) mid-flight and back up
+    must emit token-for-token what a fixed-rung engine emits: concurrency
+    rungs change scheduling, not math."""
+    def run_engine(migrating):
+        trace = InterferenceTrace.parse("3:7:4.0") if migrating else None
+        job = _serve_job(trace, slots=2, n_req=6, gen=8,
+                         rungs=_serve_rungs(2, sens=(1.0, 0.4),
+                                            rel=(1.0, 1.5)),
+                         adaptive=migrating)
+        res = SwanRuntime([job], trace=trace).run(200)
+        return job, res
+
+    fixed, _ = run_engine(False)
+    moved, res = run_engine(True)
+    migs = [m for m in moved.timeline.migrations]
+    assert migs, "the burst must force at least one serve rung migration"
+    ref = {u: f.tokens for u, f in fixed.result().items()}
+    got = {u: f.tokens for u, f in moved.result().items()}
+    assert got == ref, "rung migration changed the served tokens"
+
+
+def test_serve_job_slot_cap_limits_concurrency():
+    engine_model = build_model(TINY, impl="naive")
+    params = engine_model.init(KEY)
+    engine = ContinuousBatchingEngine(engine_model, params, max_batch=4,
+                                      max_seq=32)
+    engine.set_slot_cap(2)
+    rng = np.random.default_rng(3)
+    for i in range(6):
+        engine.submit(Request(uid=i,
+                              prompt=rng.integers(0, 64, 4).astype(np.int32),
+                              max_new_tokens=4))
+    while engine.queue or any(u is not None for u in engine.slot_uid):
+        engine.step()
+        assert sum(1 for u in engine.slot_uid if u is not None) <= 2
+    assert sorted(engine.finished) == list(range(6))
+
+
+def test_default_serve_ladder_dedupes_tiny_batches():
+    full = default_serve_ladder(8)
+    assert [r.slot_cap for r in full] == [None, 4, 2]
+    sens = [r.interference_sensitivity for r in full]
+    assert sens == sorted(sens, reverse=True) and sens[0] == 1.0
+    tiny = default_serve_ladder(1)
+    assert len(tiny) == 2  # cap rungs collapse; the bf16-KV rung survives
+    assert tiny[-1].kv_dtype == "bfloat16"
+
+
+# ---------------------------------------------------------------------------
+# energy budget: low battery forces low-power rungs
+# ---------------------------------------------------------------------------
+
+
+def test_energy_budget_low_battery_forces_downgrade():
+    def run(level):
+        trace = None
+        train = _train_job(trace, 8)
+        loan = EnergyLoan(battery_j=50.0, daily_charge_j=0.0,
+                          daily_usage_j=0.0)
+        rt = SwanRuntime([train], energy=loan, battery_level=level)
+        return rt.run(8)
+
+    low = run(0.2)   # 0.2 - loan/50 crosses critical (0.15) within ~3 ticks
+    full = run(1.0)  # a full battery never crosses in 8 ticks
+    low_energy = [m for m in low.timeline.migrations if m.reason == "energy"]
+    assert low_energy, "depleted budget must push toward low-power rungs"
+    assert low_energy[0].to_rung != "full"
+    assert not [m for m in full.timeline.migrations if m.reason == "energy"], \
+        "a full battery must not force energy downgrades"
+
+
+def test_energy_budget_blocks_upgrades():
+    """Once the budget is depleted the runtime must also refuse to upgrade
+    back, even on a clean monitor."""
+    trace = None
+    train = _train_job(trace, 12, patience=2)
+    loan = EnergyLoan(battery_j=20.0, daily_charge_j=0.0, daily_usage_j=0.0)
+    res = SwanRuntime([train], energy=loan, battery_level=0.2).run(12)
+    ups = [m for m in res.timeline.migrations if m.reason == "clear"]
+    assert not ups, "upgrades must be blocked while the budget is depleted"
+    assert train.rung.name == train.rungs()[-1].name  # walked to the bottom
+
+
+# ---------------------------------------------------------------------------
+# device loss mid-co-tenancy: train remeshes, serve keeps streaming
+# ---------------------------------------------------------------------------
+
+DEVICE_LOSS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.engine.events import ScriptedFaults
+from repro.engine.jobs import ServeJob, ServeRung
+from repro.engine.runtime import SwanRuntime
+from repro.engine.rungs import default_rung_ladder
+from repro.engine.session import TrainSession
+from repro.launch.serve import ContinuousBatchingEngine, Request
+from repro.launch.train import make_batch_fn
+from repro.models.registry import build_model
+from repro.optim.optimizers import sgd
+from repro.runtime.elastic import ElasticController
+
+cfg = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                  tie_embeddings=True, source="test")
+TICKS = 8
+
+def serve_requests():
+    rng = np.random.default_rng(5)
+    return [Request(uid=i, prompt=rng.integers(0, 64, 5).astype(np.int32),
+                    max_new_tokens=6) for i in range(4)]
+
+def make_serve():
+    model = build_model(cfg, impl="naive")
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ContinuousBatchingEngine(model, params, max_batch=2, max_seq=32)
+    return ServeJob(engine, serve_requests(), adaptive=False,
+                    rungs=[ServeRung(name="serve-full")], name="serve")
+
+# --- co-tenant run: device loss at tick 3 ---
+elastic = ElasticController(total_devices=8)
+rungs = default_rung_ladder(batch=8, microbatch=1, attn_impl="naive",
+                            include_bf16=False)
+train = TrainSession(cfg, rungs, optimizer=sgd(), lr=0.05,
+                     batch_fn=make_batch_fn(cfg, 8, 16), elastic=elastic,
+                     fault_events=ScriptedFaults({3: (6, 7)}),
+                     adaptive=False, verbose=False, name="train").bind(TICKS)
+serve = make_serve()
+res = SwanRuntime([train, serve],
+                  elastic=elastic,
+                  fault_events=train.fault_events).run(TICKS)
+cotenant = {u: f.tokens for u, f in serve.result().items()}
+
+# --- oracle: the same serve stream alone, no faults ---
+alone_job = make_serve()
+SwanRuntime([alone_job]).run(TICKS)
+alone = {u: f.tokens for u, f in alone_job.result().items()}
+
+remesh = [dict(step=m.step, kind=m.kind, reason=m.reason, job=m.job)
+          for m in res.timeline.migrations if m.kind == "remesh"]
+print("RESULT:" + json.dumps({
+    "n_healthy": elastic.n_healthy,
+    "remesh": remesh,
+    "train_steps": len(train.result().losses),
+    "serve_cotenant": {str(k): v for k, v in cotenant.items()},
+    "serve_alone": {str(k): v for k, v in alone.items()},
+    "serve_steps": [s.step for s in serve.timeline.steps],
+}))
+"""
+
+
+def test_device_loss_mid_cotenancy_train_remeshes_serve_streams(tmp_path):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", DEVICE_LOSS_SCRIPT],
+                         capture_output=True, text=True, timeout=900,
+                         env=env, cwd=str(tmp_path))
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-4000:]}"
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("RESULT:")][-1]
+    payload = json.loads(line[len("RESULT:"):])
+    assert payload["n_healthy"] == 6
+    # the training job remeshed off the dead devices...
+    assert payload["remesh"], "device loss must force a train remesh"
+    assert all(m["job"] == "train" and m["reason"] == "device-loss"
+               for m in payload["remesh"])
+    assert payload["remesh"][0]["step"] == 3
+    assert payload["train_steps"] == 8
+    # ...and the serving job never noticed: same stream, token for token
+    assert payload["serve_cotenant"] == payload["serve_alone"]
+
+
+# ---------------------------------------------------------------------------
+# MLA pallas prefill: fall back, never garbage
+# ---------------------------------------------------------------------------
+
+
+def test_mla_prefill_pallas_falls_back_to_chunked():
+    from repro.configs import ASSIGNED
+    cfg = ASSIGNED["deepseek-v3-671b"].reduced()
+    assert cfg.use_mla
+    tokens = np.arange(2 * 16, dtype=np.int32).reshape(2, 16) % cfg.vocab_size
+    ref_model = build_model(cfg, impl="chunked")
+    params = ref_model.init(KEY)
+    ref = ref_model.forward(params, {"tokens": tokens})
+    pal_model = build_model(cfg, impl="pallas")
+    import repro.models.attention as A
+    A._MLA_PALLAS_WARNED = False
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        got = pal_model.forward(params, {"tokens": tokens})
+        got2 = pal_model.forward(params, {"tokens": tokens})
+    fallback = [x for x in w if "falling back to 'chunked'" in str(x.message)]
+    assert len(fallback) == 1, "exactly one fallback warning"
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_mha_rejects_asymmetric_heads():
+    from repro.kernels.flash_attention import flash_attention_mha
+    q = np.zeros((1, 2, 8, 24), np.float32)
+    k = np.zeros((1, 2, 8, 24), np.float32)
+    v = np.zeros((1, 2, 8, 16), np.float32)
+    with pytest.raises(ValueError, match="matching q/k/v head dims"):
+        flash_attention_mha(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# mixed CLI
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_cli_cotenancy_under_thermal_trace(tmp_path):
+    from repro.launch import mixed as M
+    out = str(tmp_path / "merged.json")
+    res = M.main(["--arch", "llama3.2-1b", "--reduced", "--ticks", "12",
+                  "--batch", "8", "--seq", "32", "--slots", "2",
+                  "--requests", "4", "--prompt-len", "8", "--gen", "6",
+                  "--thermal-trace", "0.5:0.3:4.0", "--quiet",
+                  "--timeline-out", out])
+    with open(out) as f:
+        tl = Timeline.from_json(json.load(f))
+    assert set(tl.jobs()) == {"train", "serve"}
+    assert any(m.reason in ("interference", "arbitration")
+               for m in tl.migrations), \
+        "the shared thermal trace must force at least one downgrade"
+    assert len(res.jobs["train"].result().losses) == 12
+    assert res.jobs["serve"].result(), "serve stream must finish requests"
