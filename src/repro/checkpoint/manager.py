@@ -1,21 +1,28 @@
-"""Rolling checkpoint manager with elastic restore.
+"""Rolling checkpoint manager with elastic, crash-tolerant restore.
 
 - ``save(step, state)``: atomic write + retention of the last ``keep`` steps.
+  Retention never removes the checkpoint just written (even when ``keep`` is
+  misconfigured to 0) and tolerates concurrent pruners — a file already gone
+  is a success, not a crash.
 - ``restore_latest(mesh=None, specs=None)``: loads numpy trees and, when a
   mesh is given, device_puts each leaf under the *current* mesh's sharding —
   the checkpoint is mesh-shape-agnostic, so restoring onto a smaller surviving
   mesh (node failure) or a grown one (elastic scale-up) is the same code path.
-  This is Swan's execution-choice migration applied to cluster state.
+  A truncated/corrupt newest checkpoint (crash mid-write on a non-atomic
+  filesystem, torn copy) is *skipped with a warning* and the previous step is
+  restored instead — an interrupted save costs at most ``ckpt_every`` steps
+  of progress, never the whole run.
 """
 from __future__ import annotations
 
 import os
 import re
-from typing import Any, Optional
+import warnings
+from typing import Any, List, Optional
 
 import jax
 
-from repro.checkpoint.store import load_pytree, save_pytree
+from repro.checkpoint.store import CheckpointCorrupt, load_pytree, save_pytree
 
 _PAT = re.compile(r"^step_(\d+)\.ckpt$")
 
@@ -29,7 +36,7 @@ class CheckpointManager:
     def _path(self, step: int) -> str:
         return os.path.join(self.directory, f"step_{step:010d}.ckpt")
 
-    def steps(self):
+    def steps(self) -> List[int]:
         out = []
         for name in os.listdir(self.directory):
             m = _PAT.match(name)
@@ -43,8 +50,16 @@ class CheckpointManager:
             lambda a: jax.device_get(a) if hasattr(a, "dtype") else a, state)
         path = self._path(step)
         save_pytree({"step": step, "state": host_state}, path)
-        for s in self.steps()[:-self.keep]:
-            os.unlink(self._path(s))
+        # retention: keep >= 1 whatever the configuration says — pruning the
+        # checkpoint that was just written would turn save() into delete()
+        keep = max(int(self.keep), 1)
+        for s in self.steps()[:-keep]:
+            if s == step:
+                continue
+            try:
+                os.unlink(self._path(s))
+            except FileNotFoundError:
+                pass  # a concurrent pruner/restart got there first
         return path
 
     def restore(self, step: int, *, mesh=None, specs: Optional[Any] = None):
@@ -55,10 +70,22 @@ class CheckpointManager:
         return payload["step"], state
 
     def restore_latest(self, *, mesh=None, specs: Optional[Any] = None):
-        steps = self.steps()
-        if not steps:
-            return None
-        return self.restore(steps[-1], mesh=mesh, specs=specs)
+        """Restore the newest *readable* checkpoint.
+
+        Walks steps newest-first; a corrupt or vanished file (crash between
+        temp write and rename leaves only a ``.tmp``; a torn write fails the
+        store checksum) is skipped with a warning and the previous step is
+        tried. Returns None when no checkpoint can be read.
+        """
+        for step in reversed(self.steps()):
+            try:
+                return self.restore(step, mesh=mesh, specs=specs)
+            except (CheckpointCorrupt, FileNotFoundError, EOFError,
+                    OSError) as e:
+                warnings.warn(
+                    f"checkpoint step {step} unreadable ({e}); falling back "
+                    f"to the previous step", RuntimeWarning, stacklevel=2)
+        return None
 
 
 def shard_restore(state, mesh, specs=None):

@@ -7,14 +7,26 @@ device_puts under whatever sharding the *current* mesh dictates — this is
 what makes elastic re-meshing (Swan migration at cluster scale) a pure
 restore-time concern.
 
+Crash consistency: ``save_pytree`` writes to a temp file in the target
+directory and ``os.replace``s it into place, so a crash at any point leaves
+either the previous file or the new one, never a torn mix. On top of that
+every file carries a header checksum (``_MAGIC`` + crc32 over the
+compressed payload), so a file that *was* torn anyway — non-atomic
+filesystem, truncated copy, bit rot — is detected at load time as
+:class:`CheckpointCorrupt` instead of being deserialized into garbage.
+``CheckpointManager.restore_latest`` uses that signal to fall back to the
+previous step.
+
 ``zstandard`` is an optional dependency: when absent we compress with zlib.
 The formats are self-describing (zstd frames start with the magic
 ``28 B5 2F FD``), so either build can read checkpoints written by the other —
 except that reading a zstd checkpoint on a zlib-only install raises.
+Headerless files written by older builds still load (no checksum to check).
 """
 from __future__ import annotations
 
 import os
+import struct
 import tempfile
 import zlib
 from typing import Any
@@ -28,9 +40,17 @@ except ImportError:  # optional dep: fall back to stdlib zlib
     zstd = None
 
 _ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+# checksummed-container header: magic + u32 crc32(compressed payload)
+_MAGIC = b"SWCK\x01\x00"
+_HEADER = struct.Struct(">6sI")
 
 _ARR = "__arr__"
 _TUPLE = "__tuple__"
+
+
+class CheckpointCorrupt(RuntimeError):
+    """The file's checksum/framing does not match its contents (torn write,
+    truncation, bit rot). The caller should fall back to an older step."""
 
 
 def _encode(node):
@@ -42,8 +62,6 @@ def _encode(node):
         return {_TUPLE: [_encode(v) for v in node]}
     if hasattr(node, "dtype"):  # jax or numpy array
         a = np.asarray(node)
-        if a.dtype == np.dtype("bfloat16") if hasattr(np, "bfloat16") else False:
-            pass
         dtype = str(a.dtype)
         if dtype == "bfloat16":
             a = a.view(np.uint16)
@@ -71,18 +89,59 @@ def _decode(node):
     return node
 
 
-def save_pytree(tree: Any, path: str, *, level: int = 3) -> None:
+def serialize_pytree(tree: Any, *, level: int = 3) -> bytes:
+    """Full checksummed file image (header + compressed msgpack payload)."""
     payload = msgpack.packb(_encode(tree), use_bin_type=True)
     if zstd is not None:
         comp = zstd.ZstdCompressor(level=level).compress(payload)
     else:
         comp = zlib.compress(payload, level)
+    return _HEADER.pack(_MAGIC, zlib.crc32(comp) & 0xFFFFFFFF) + comp
+
+
+def deserialize_pytree(data: bytes, *, source: str = "<bytes>") -> Any:
+    """Inverse of :func:`serialize_pytree`; also reads legacy headerless
+    files. Raises :class:`CheckpointCorrupt` on checksum/framing mismatch."""
+    if data[:len(_MAGIC)] == _MAGIC:
+        if len(data) < _HEADER.size:
+            raise CheckpointCorrupt(f"{source}: truncated header")
+        _, crc = _HEADER.unpack_from(data)
+        comp = data[_HEADER.size:]
+        if zlib.crc32(comp) & 0xFFFFFFFF != crc:
+            raise CheckpointCorrupt(
+                f"{source}: checksum mismatch (torn or corrupt write)")
+    else:
+        comp = data  # legacy headerless file: no checksum to verify
+    try:
+        if comp[:4] == _ZSTD_MAGIC:
+            if zstd is None:
+                raise RuntimeError(
+                    f"{source} is zstd-compressed but zstandard is not "
+                    f"installed")
+            payload = zstd.ZstdDecompressor().decompress(comp)
+        else:
+            payload = zlib.decompress(comp)
+        return _decode(msgpack.unpackb(payload, raw=False))
+    except (zlib.error, msgpack.exceptions.UnpackException, ValueError,
+            KeyError, TypeError) as e:
+        # a checksummed file that passed crc cannot land here unless the
+        # writer was buggy; legacy files land here when truncated
+        raise CheckpointCorrupt(f"{source}: undecodable payload: {e}") from e
+    except Exception as e:  # zstd raises its own error type
+        if zstd is not None and isinstance(e, zstd.ZstdError):
+            raise CheckpointCorrupt(
+                f"{source}: undecodable payload: {e}") from e
+        raise
+
+
+def save_pytree(tree: Any, path: str, *, level: int = 3) -> None:
+    data = serialize_pytree(tree, level=level)
     d = os.path.dirname(os.path.abspath(path))
     os.makedirs(d, exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
     try:
         with os.fdopen(fd, "wb") as f:
-            f.write(comp)
+            f.write(data)
         os.replace(tmp, path)  # atomic
     finally:
         if os.path.exists(tmp):
@@ -91,12 +150,5 @@ def save_pytree(tree: Any, path: str, *, level: int = 3) -> None:
 
 def load_pytree(path: str) -> Any:
     with open(path, "rb") as f:
-        comp = f.read()
-    if comp[:4] == _ZSTD_MAGIC:
-        if zstd is None:
-            raise RuntimeError(
-                f"{path} is zstd-compressed but zstandard is not installed")
-        payload = zstd.ZstdDecompressor().decompress(comp)
-    else:
-        payload = zlib.decompress(comp)
-    return _decode(msgpack.unpackb(payload, raw=False))
+        data = f.read()
+    return deserialize_pytree(data, source=path)

@@ -119,6 +119,12 @@ class EnergyLoan:
     def borrow(self, joules: float) -> None:
         self.loan_j += joules
 
+    def repay(self, joules: float) -> None:
+        """Pay the loan down by ``joules`` (a charger tick; the runtime calls
+        this while a ChargingTrace is active). The loan never goes negative —
+        charging beyond the loan tops the battery, it does not bank credit."""
+        self.loan_j = max(0.0, self.loan_j - max(joules, 0.0))
+
     def repay_daily(self) -> None:
         surplus = max(self.daily_charge_j - self.daily_usage_j, 0.0)
         self.loan_j = max(0.0, self.loan_j - surplus)

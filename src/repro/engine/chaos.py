@@ -1,0 +1,233 @@
+"""Chaos fault injection for SwanRuntime.
+
+The robustness claims this repo makes — pause/resume is exact, a torn
+checkpoint costs bounded progress, pool pressure degrades service instead of
+crashing it — are only claims until something actually goes wrong. The
+:class:`ChaosInjector` makes things go wrong *deterministically*: a seeded
+schedule of faults drawn from every failure class the runtime handles,
+applied through the same public surfaces a real fault would arrive through.
+The runtime consults it at the top of each tick (``SwanRuntime(chaos=...)``)
+and multiplies its ``latency_multiplier`` into every job's observed slowdown;
+it never special-cases an injected fault, so each one exercises exactly the
+recovery path the organic version would.
+
+Fault classes (``ChaosEvent.kind``):
+
+- ``device_loss``     — fail one healthy device in the shared elastic pool;
+                        jobs remesh via their normal ``on_device_loss`` path.
+- ``pool_pressure``   — a co-tenant grabs KV blocks out of a paged serve
+                        engine's pool (``engine.hold_blocks``) for
+                        ``duration`` ticks; admission degrades per policy
+                        (shed / serialize), residents are never starved.
+- ``ckpt_torn``       — simulate a crash mid-checkpoint-write: a torn file
+                        (valid header, wrong payload) appears as the *newest*
+                        step, plus the orphan ``.tmp`` such a crash leaves.
+                        The next restore must skip it and fall back.
+- ``thermal_spike``   — dump ``magnitude`` onto the shared die temperature;
+                        the closed-loop throttle engages until migrations
+                        shed enough heat.
+- ``latency_spike``   — multiply every job's observed latency by
+                        ``magnitude`` for ``duration`` ticks (a co-tenant
+                        burst the trace didn't script).
+- ``fg_burst``        — the user picks up the phone: inject a foreground
+                        burst of ``duration`` ticks into the
+                        ForegroundAppJob, which makes the runtime pause and
+                        later resume every preemptible job.
+
+Every applied fault is appended to ``injector.log`` (and its class to
+``injector.applied``) so a harness can assert coverage; faults whose target
+is absent (no elastic pool, no paged engine, no foreground job) are logged
+as skipped rather than silently dropped.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+KINDS = ("device_loss", "pool_pressure", "ckpt_torn", "thermal_spike",
+         "latency_spike", "fg_burst")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosEvent:
+    tick: int
+    kind: str
+    duration: int = 1      # ticks (pool_pressure / latency_spike / fg_burst)
+    magnitude: float = 2.0  # blocks | temp | latency multiplier (by kind)
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown chaos kind {self.kind!r}; "
+                             f"one of {KINDS}")
+        if self.duration < 1:
+            raise ValueError(f"duration must be >= 1, got {self.duration}")
+
+
+class ChaosInjector:
+    """Applies a deterministic fault schedule to a running SwanRuntime."""
+
+    def __init__(self, events: Sequence[ChaosEvent] = ()):
+        self.events = sorted(events, key=lambda e: (e.tick, e.kind))
+        self.log: List[Dict[str, Any]] = []
+        self.applied: Set[str] = set()
+        # latency spikes are pure intervals — precomputed so
+        # latency_multiplier is a cheap read on every job every tick
+        self._lat: List[Tuple[int, int, float]] = [
+            (e.tick, e.tick + e.duration, float(e.magnitude))
+            for e in self.events if e.kind == "latency_spike"]
+        self._holds: List[Tuple[int, Any]] = []  # (release_tick, engine)
+        self._by_tick: Dict[int, List[ChaosEvent]] = {}
+        for e in self.events:
+            self._by_tick.setdefault(e.tick, []).append(e)
+
+    # -- deterministic random schedules --------------------------------------
+    @classmethod
+    def random(cls, seed: int, horizon: int, *,
+               kinds: Sequence[str] = KINDS,
+               events_per_kind: int = 2) -> "ChaosInjector":
+        """A seeded schedule with ``events_per_kind`` of every fault class
+        spread over ``[horizon//8, horizon)`` — late enough that each job has
+        warmed up, deterministic for a given (seed, horizon, kinds)."""
+        rng = np.random.default_rng(seed)
+        lo = max(1, horizon // 8)
+        events = []
+        for kind in kinds:
+            for _ in range(events_per_kind):
+                tick = int(rng.integers(lo, max(lo + 1, horizon * 3 // 4)))
+                dur = int(rng.integers(2, max(3, horizon // 8)))
+                if kind == "thermal_spike":
+                    mag = float(rng.uniform(0.8, 1.5))
+                elif kind == "latency_spike":
+                    mag = float(rng.uniform(1.5, 4.0))
+                elif kind == "pool_pressure":
+                    mag = float(rng.integers(3, 10))  # blocks
+                else:
+                    mag = float(rng.integers(0, 1 << 30))  # selector entropy
+                events.append(ChaosEvent(tick=tick, kind=kind,
+                                         duration=dur, magnitude=mag))
+        return cls(events)
+
+    # -- runtime hooks --------------------------------------------------------
+    def latency_multiplier(self, tick: int) -> float:
+        m = 1.0
+        for a, b, mult in self._lat:
+            if a <= tick < b:
+                m *= mult
+        return m
+
+    def begin_tick(self, tick: int, runtime) -> None:
+        # release pool holds whose interval ended
+        due = [(t, e) for t, e in self._holds if t <= tick]
+        if due:
+            self._holds = [(t, e) for t, e in self._holds if t > tick]
+            for _, engine in due:
+                engine.release_held()
+                self._log(tick, "pool_pressure", released=True)
+        for event in self._by_tick.get(tick, ()):
+            self._apply(tick, event, runtime)
+
+    # -- application ----------------------------------------------------------
+    def _log(self, tick: int, kind: str, **detail) -> None:
+        self.log.append({"tick": tick, "kind": kind, **detail})
+
+    def _apply(self, tick: int, e: ChaosEvent, runtime) -> None:
+        handler = getattr(self, f"_apply_{e.kind}")
+        handler(tick, e, runtime)
+
+    def _apply_device_loss(self, tick: int, e: ChaosEvent, runtime) -> None:
+        if runtime.elastic is None:
+            self._log(tick, e.kind, skipped="no elastic pool")
+            return
+        healthy = list(runtime.elastic.healthy_ids())
+        if len(healthy) <= 1:
+            self._log(tick, e.kind, skipped="would kill the last device")
+            return
+        victim = healthy[int(e.magnitude) % len(healthy)]
+        runtime.elastic.mark_failed((victim,))
+        for job in runtime.jobs:
+            if not job.done and not job.paused:
+                job.on_device_loss(tick, (victim,))
+        self.applied.add(e.kind)
+        self._log(tick, e.kind, device=victim)
+
+    def _apply_pool_pressure(self, tick: int, e: ChaosEvent, runtime) -> None:
+        hit = False
+        for job in runtime.jobs:
+            engine = getattr(job, "engine", None)
+            if engine is None or not hasattr(engine, "hold_blocks"):
+                continue
+            held = engine.hold_blocks(int(e.magnitude))
+            if held or engine.kv is not None:
+                hit = True
+                self._holds.append((tick + e.duration, engine))
+                self._log(tick, e.kind, job=job.name, blocks=held,
+                          until=tick + e.duration)
+        if hit:
+            self.applied.add(e.kind)
+        else:
+            self._log(tick, e.kind, skipped="no paged serve engine")
+
+    def _apply_ckpt_torn(self, tick: int, e: ChaosEvent, runtime) -> None:
+        hit = False
+        for job in runtime.jobs:
+            mgr_fn = getattr(job, "_ckpt", None)
+            if mgr_fn is None or job.done:
+                continue
+            mgr = mgr_fn()
+            # the torn file must be the NEWEST step so restore_latest tries
+            # it first — exactly where a crash mid-save would leave it
+            steps = mgr.steps()
+            step = (steps[-1] if steps else int(
+                getattr(job, "_step_idx", 0))) + 1
+            path = mgr._path(step)
+            from repro.checkpoint.store import serialize_pytree
+            blob = serialize_pytree({"step": step, "state": {"torn": True}})
+            with open(path, "wb") as f:
+                f.write(blob[:max(8, len(blob) // 2)])  # torn mid-write
+            with open(path + ".tmp", "wb") as f:  # the orphan temp file
+                f.write(b"\x00" * 16)
+            hit = True
+            self.applied.add(e.kind)
+            self._log(tick, e.kind, job=job.name, step=step,
+                      path=os.path.basename(path))
+        if not hit:
+            self._log(tick, e.kind, skipped="no checkpointing job")
+
+    def _apply_thermal_spike(self, tick: int, e: ChaosEvent,
+                             runtime) -> None:
+        trace = runtime.trace
+        if trace is None or not hasattr(trace, "temp"):
+            self._log(tick, e.kind, skipped="no thermal trace")
+            return
+        trace.temp += float(e.magnitude)
+        self.applied.add(e.kind)
+        self._log(tick, e.kind, temp=round(trace.temp, 3))
+
+    def _apply_latency_spike(self, tick: int, e: ChaosEvent,
+                             runtime) -> None:
+        # interval already active via latency_multiplier; log the onset
+        self.applied.add(e.kind)
+        self._log(tick, e.kind, mult=e.magnitude,
+                  until=tick + e.duration)
+
+    def _apply_fg_burst(self, tick: int, e: ChaosEvent, runtime) -> None:
+        for job in runtime.jobs:
+            if getattr(job, "is_foreground", False) and \
+                    hasattr(job, "add_burst"):
+                job.add_burst(tick, tick + e.duration)
+                self.applied.add(e.kind)
+                self._log(tick, e.kind, until=tick + e.duration)
+                return
+        self._log(tick, e.kind, skipped="no foreground job")
+
+    # -- reporting ------------------------------------------------------------
+    def skipped_kinds(self) -> Set[str]:
+        return {entry["kind"] for entry in self.log if "skipped" in entry}
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"events": [dataclasses.asdict(e) for e in self.events],
+                "applied": sorted(self.applied),
+                "log": self.log}

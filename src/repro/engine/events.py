@@ -153,6 +153,50 @@ class ThermalTrace:
 
 
 @dataclasses.dataclass(frozen=True)
+class ChargingTrace:
+    """Charger plug/unplug schedule: ``(start, stop, watts)`` intervals.
+
+    While an interval is active the runtime repays the shared EnergyLoan at
+    ``watts`` joules per tick (the same normalized units jobs borrow in), so
+    a recharging battery walks the loan back under critical and re-enables
+    rung upgrades — the recovery half of the paper's energy-loan accounting
+    (§5.1), which ``repay_daily`` only models at day granularity.
+    """
+    intervals: Tuple[Tuple[int, int, float], ...] = ()
+
+    @classmethod
+    def parse(cls, spec: str) -> "ChargingTrace":
+        """Parse ``"start:stop:watts[,start:stop:watts...]"``,
+        e.g. ``"40:80:5"`` (the ``--charging-trace`` flag)."""
+        out = []
+        for part in spec.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            fields = part.split(":")
+            if len(fields) != 3:
+                raise ValueError(f"bad charge interval {part!r}; want "
+                                 f"start:stop:watts")
+            start, stop, watts = int(fields[0]), int(fields[1]), float(fields[2])
+            if stop <= start or watts <= 0:
+                raise ValueError(f"bad charge interval {part!r}: need "
+                                 f"stop>start, watts>0")
+            out.append((start, stop, watts))
+        return cls(tuple(sorted(out)))
+
+    def rate(self, tick: int) -> float:
+        """Charger watts at ``tick`` (0.0 = unplugged)."""
+        return sum(w for a, b, w in self.intervals if a <= tick < b)
+
+    def active(self, tick: int) -> bool:
+        return self.rate(tick) > 0.0
+
+    def to_json(self) -> List[dict]:
+        return [{"start": a, "stop": b, "watts": w}
+                for a, b, w in self.intervals]
+
+
+@dataclasses.dataclass(frozen=True)
 class DeviceLossEvent:
     step: int
     device_ids: Tuple[int, ...]

@@ -12,21 +12,47 @@ that arbitration:
   :class:`StepReport`), reports what its monitor sees (``observe``), and can
   **migrate** between rungs without restarting (``migrate``).
 
-Two implementations ship: ``engine.session.TrainSession`` (training; its old
-event loop is now the single-job special case of the runtime's) and
+Lifecycle: every job is in one of three states —
+
+- ``RUNNING``: scheduled every tick;
+- ``PAUSED``: preempted (a foreground app owns the SoC). A paused job is
+  skipped entirely — no quantum, no power draw, no proposals. Pausing a
+  :class:`~repro.engine.session.TrainSession` checkpoints and *releases* its
+  state (the foreground app wants the memory); resuming restores it through
+  the existing rung/checkpoint machinery at the exact pre-pause step;
+- ``DRAINING``: winding down — a draining ServeJob stops admitting queued
+  requests and is done once the residents retire.
+
+Three implementations ship: ``engine.session.TrainSession`` (training; its
+old event loop is now the single-job special case of the runtime's),
 :class:`ServeJob` below, which wraps ``launch.serve.ContinuousBatchingEngine``
 with a *serving* rung ladder — decode concurrency cap, attention impl, KV
-dtype — so serving becomes migratable exactly like training.
+dtype — so serving becomes migratable exactly like training, and
+:class:`ForegroundAppJob`, the preemptor: an interactive app whose scripted
+bursts pause every preemptible co-tenant outright (paper §3 — user
+experience is an absolute constraint, not a goodput trade).
+
+SLO: a ServeJob can carry a p99 token-latency target (``slo_p99_s``). The
+runtime then arbitrates on **SLO headroom** instead of relative goodput: a
+job in violation generates downgrade pressure on its co-tenants and is
+itself the last candidate to be downgraded further.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Deque, Dict, List, Optional, Sequence
+
+import numpy as np
 
 from repro.core.controller import SwanController
 from repro.core.cost import ChoiceProfile, ladder_sensitivities
 from repro.engine.timeline import MigrationRecord, Timeline
+
+RUNNING = "RUNNING"
+PAUSED = "PAUSED"
+DRAINING = "DRAINING"
 
 
 @dataclasses.dataclass
@@ -68,6 +94,12 @@ class SocJob:
     priority: float = 1.0
     controller: SwanController
     timeline: Timeline
+    state: str = RUNNING
+    # a foreground burst may pause this job outright (background work)
+    preemptible: bool = False
+    # this job IS the foreground app: while it demands the SoC, the runtime
+    # pauses every preemptible co-tenant
+    is_foreground: bool = False
 
     # -- ladder --------------------------------------------------------------
     def rungs(self) -> Sequence[Any]:
@@ -116,13 +148,57 @@ class SocJob:
         lost = max(0.01, 1.0 - float(a.rel_latency) / float(b.rel_latency))
         return dsens / (lost * max(float(self.priority), 1e-9))
 
+    # -- SLO -----------------------------------------------------------------
+    def slo_headroom(self) -> Optional[float]:
+        """Fraction of the latency SLO still unspent (negative = violating;
+        ``None`` = this job carries no SLO). The runtime arbitrates on this:
+        a violator's co-tenants are downgraded first, and upgrades are held
+        while any job is in violation."""
+        return None
+
     # -- lifecycle -----------------------------------------------------------
     @property
     def done(self) -> bool:
         raise NotImplementedError
 
+    @property
+    def paused(self) -> bool:
+        return self.state == PAUSED
+
+    def pause(self, tick: int) -> None:
+        """Preempt this job (foreground burst / explicit request). Idempotent;
+        subclasses override :meth:`on_pause` to checkpoint and release
+        resources."""
+        if self.state == PAUSED:
+            return
+        self.on_pause(tick)
+        self.state = PAUSED
+
+    def resume(self, tick: int) -> None:
+        """Undo :meth:`pause`; subclasses override :meth:`on_resume` to
+        restore released state (the pre-pause step, exactly)."""
+        if self.state != PAUSED:
+            return
+        self.on_resume(tick)
+        self.state = RUNNING
+
+    def drain(self, tick: int = 0) -> None:
+        """Stop taking on new work; finish what is in flight."""
+        if self.state == RUNNING:
+            self.state = DRAINING
+
+    def on_pause(self, tick: int) -> None:
+        """Checkpoint / release resources before the pause takes effect."""
+
+    def on_resume(self, tick: int) -> None:
+        """Reacquire resources released by :meth:`on_pause`."""
+
     def prepare(self) -> None:
         """Called once before the first tick (idempotent)."""
+
+    def begin_tick(self, tick: int) -> None:
+        """Called at the top of every runtime tick (before the power sum),
+        for every unfinished, unpaused job."""
 
     def step(self, tick: int) -> StepReport:
         raise NotImplementedError
@@ -264,7 +340,9 @@ class ServeJob(SocJob):
                  rungs: Optional[Sequence[ServeRung]] = None,
                  name: str = "serve", priority: float = 1.0,
                  adaptive: bool = True, upgrade_patience: int = 5,
-                 latency_fn=None, verbose: bool = False):
+                 latency_fn=None, verbose: bool = False,
+                 slo_p99_s: Optional[float] = None, slo_window: int = 64,
+                 slo_min_samples: int = 8):
         self.engine = engine
         self._requests = list(requests)
         self._rungs = list(rungs) if rungs is not None \
@@ -293,6 +371,14 @@ class ServeJob(SocJob):
         self._steps_on_rung = 0
         self._step_idx = 0
         self._prepared = False
+        # p99 token-latency SLO: every resident request receives one token
+        # per engine step, so the step's observed latency IS each of those
+        # tokens' latency; a sliding window of them estimates the p99
+        self.slo_p99_s = slo_p99_s
+        self.slo_min_samples = slo_min_samples
+        self._slo_window: Deque[float] = collections.deque(maxlen=slo_window)
+        self._slo_tokens = 0
+        self._slo_attained = 0
 
     # -- SocJob surface ------------------------------------------------------
     def rungs(self) -> Sequence[ServeRung]:
@@ -300,8 +386,39 @@ class ServeJob(SocJob):
 
     @property
     def done(self) -> bool:
-        return self._prepared and not self.engine.queue and \
-            all(u is None for u in self.engine.slot_uid)
+        if not self._prepared:
+            return False
+        resident = any(u is not None for u in self.engine.slot_uid)
+        if self.state == DRAINING:
+            return not resident
+        return not self.engine.queue and not resident
+
+    def drain(self, tick: int = 0) -> None:
+        super().drain(tick)
+        if self.state == DRAINING:
+            self.engine.drain()
+
+    # -- SLO -----------------------------------------------------------------
+    def slo_headroom(self) -> Optional[float]:
+        if self.slo_p99_s is None or \
+                len(self._slo_window) < self.slo_min_samples:
+            return None
+        p99 = float(np.percentile(np.asarray(self._slo_window), 99.0))
+        return (self.slo_p99_s - p99) / self.slo_p99_s
+
+    def slo_stats(self) -> Dict[str, Any]:
+        """Attainment = fraction of emitted tokens whose step latency met the
+        SLO (the per-token view the paper's interactivity constraint cares
+        about)."""
+        head = self.slo_headroom()
+        return {
+            "slo_p99_s": self.slo_p99_s,
+            "headroom": None if head is None else round(head, 4),
+            "tokens": self._slo_tokens,
+            "attained_tokens": self._slo_attained,
+            "attainment": round(self._slo_attained / self._slo_tokens, 4)
+            if self._slo_tokens else None,
+        }
 
     def prepare(self) -> None:
         if self._prepared:
@@ -329,6 +446,11 @@ class ServeJob(SocJob):
         else:
             observed = dt * slowdown
         report.observed_s = observed
+        if self.slo_p99_s is not None and report.work > 0:
+            self._slo_window.append(observed)
+            self._slo_tokens += int(report.work)
+            if observed <= self.slo_p99_s:
+                self._slo_attained += int(report.work)
         self.timeline.record_step(step=self._step_idx, rung=rung.name,
                                   latency_s=round(dt, 6),
                                   observed_s=round(observed, 6), loss=0.0,
@@ -368,3 +490,95 @@ class ServeJob(SocJob):
 
     def result(self) -> Dict[int, Any]:
         return self.engine.finished
+
+
+# ---------------------------------------------------------------------------
+# ForegroundAppJob: the preemptor
+# ---------------------------------------------------------------------------
+
+
+class ForegroundAppJob(SocJob):
+    """An interactive foreground app (paper §3: on-device training must never
+    hurt user experience). It produces no arbiter-accounted goodput — it
+    *occupies* the SoC: while one of its bursts is active the runtime pauses
+    every preemptible co-tenant outright (background training checkpoints and
+    releases its state) instead of merely downgrading it, and the app's power
+    draw keeps heating the shared ThermalTrace so co-tenants that stay up
+    still feel it thermally.
+
+    Bursts are ``(start, stop)`` tick intervals — scripted up front, or
+    injected live (:meth:`add_burst`) by the chaos harness.
+    """
+
+    is_foreground = True
+    preemptible = False
+
+    def __init__(self, bursts: Sequence[Sequence[int]] = (), *,
+                 name: str = "foreground", latency_s: float = 0.016,
+                 power: float = 2.0, sensitivity: float = 1.0):
+        self.name = name
+        self.priority = 1e9  # absolute: expressed via preemption, not scores
+        self.adaptive = False
+        self.latency_fn = None
+        self._bursts: List[List[int]] = [[int(a), int(b)] for a, b in bursts]
+        self._latency_s = float(latency_s)
+        rung = ServeRung(name="fg-active", interference_sensitivity=sensitivity,
+                         rel_latency=1.0, latency_estimate_s=latency_s,
+                         power_draw=power)
+        self._rungs = [rung]
+        self.controller = SwanController([rung.profile()])
+        self.timeline = Timeline()
+        self._expected: Dict[str, float] = {rung.name: latency_s}
+        self._tick = -1
+
+    # -- schedule ------------------------------------------------------------
+    def add_burst(self, start: int, stop: int) -> None:
+        if stop <= start:
+            raise ValueError(f"bad burst [{start}, {stop})")
+        self._bursts.append([int(start), int(stop)])
+
+    def demands_soc(self, tick: int) -> bool:
+        """True while the user is interacting — the runtime preempts
+        preemptible co-tenants for exactly these ticks."""
+        return any(a <= tick < b for a, b in self._bursts)
+
+    # -- SocJob surface ------------------------------------------------------
+    def rungs(self) -> Sequence[ServeRung]:
+        return self._rungs
+
+    def power_draw(self) -> float:
+        # an idle foreground app draws nothing; only its bursts heat the die
+        return super().power_draw() if self.demands_soc(self._tick) else 0.0
+
+    def sensitivity(self) -> float:
+        return super().sensitivity() if self.demands_soc(self._tick) else 0.0
+
+    @property
+    def done(self) -> bool:
+        # done once past the last scripted burst; chaos may add more later,
+        # which flips this back (the property is recomputed every tick)
+        return not any(self._tick < b for _, b in self._bursts)
+
+    def begin_tick(self, tick: int) -> None:
+        self._tick = tick
+
+    def step(self, tick: int) -> StepReport:
+        self._tick = tick
+        if not self.demands_soc(tick):
+            return StepReport(latency_s=0.0, work=0.0)
+        return StepReport(latency_s=self._latency_s, work=0.0)
+
+    def observe(self, tick: int, report: StepReport,
+                slowdown: float) -> Optional[str]:
+        if report.latency_s > 0.0:
+            observed = report.latency_s * slowdown
+            report.observed_s = observed
+            self.timeline.record_step(step=tick, rung="fg-active",
+                                      latency_s=round(report.latency_s, 6),
+                                      observed_s=round(observed, 6), loss=0.0,
+                                      work=0.0)
+        return None  # never proposes; never migrates
+
+    def migrate(self, direction: str, reason: str,
+                tick: int) -> Optional[MigrationRecord]:
+        return None

@@ -16,21 +16,40 @@ its own view of the device. ``SwanRuntime`` owns the single loop:
   — instead of every pressured controller thrashing down independently.
   Upgrades are also serialized (one per tick) so re-adding power cannot
   re-trip the throttle in a single jump.
+- **SLO-headroom arbitration**: a job carrying a latency SLO
+  (``SocJob.slo_headroom``) changes the auction from relative goodput to
+  absolute deadlines. A violator generates downgrade pressure even when its
+  own monitor is quiet, is the *last* candidate to be downgraded further
+  (its co-tenants shed first), and upgrades are held device-wide until
+  every SLO is back inside its target.
+- **foreground preemption**: while a :class:`ForegroundAppJob` burst is
+  active, every preemptible job is *paused* — not downgraded. Background
+  training checkpoints and releases its state on pause and resumes at the
+  exact pre-pause step when the burst ends.
 - **shared energy budget**: an optional ``core.energy.EnergyLoan`` is
   charged with the summed draw every tick; once the borrowed energy would
   push the battery below critical, the runtime walks the hungriest job
   down-ladder ("energy" migrations) and blocks upgrades until the budget
-  recovers — low battery reorders every ladder toward its low-power end.
+  recovers. A ``ChargingTrace`` repays the loan while the charger is
+  plugged (and ``day_ticks`` applies the paper's daily surplus), so a
+  recharging battery re-enables upgrades.
 - **merged timeline**: per-job Timelines are merged into one job-tagged
   runtime timeline (``Timeline.merged``) for benchmarks and tests.
 
 A single-job runtime reduces exactly to the old TrainSession loop —
 ``TrainSession.run`` is now a thin wrapper that builds one.
+
+Chaos: a fault injector (``engine/chaos.py``) can be attached via
+``chaos=``; it is consulted at the top of every tick (to inject device loss,
+thermal spikes, pool pressure, foreground bursts, torn checkpoints) and its
+``latency_multiplier`` rides on top of the shared trace's slowdown (latency
+spikes). The runtime itself never special-cases a fault kind — every
+injected fault exercises exactly the recovery path a real one would.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.engine.jobs import SocJob
 from repro.engine.timeline import Timeline
@@ -43,11 +62,13 @@ class RuntimeResult:
     work: Dict[str, float]  # goodput units per job
     virtual_time_s: float  # sum over ticks of the slowest job's observed time
     jobs: Dict[str, SocJob] = dataclasses.field(default_factory=dict)
+    preemptions: int = 0  # foreground pauses committed by the runtime
 
     def summary(self) -> dict:
         return {"ticks": self.ticks,
                 "virtual_time_s": round(self.virtual_time_s, 6),
                 "work": {k: round(v, 4) for k, v in self.work.items()},
+                "preemptions": self.preemptions,
                 "timeline": self.timeline.summary()}
 
 
@@ -56,7 +77,8 @@ class SwanRuntime:
                  elastic=None, fault_events=None,
                  energy=None, battery_level: float = 1.0,
                  energy_unit_j: float = 1.0,
-                 verbose: bool = False):
+                 charging=None, day_ticks: Optional[int] = None,
+                 chaos=None, verbose: bool = False):
         if not jobs:
             raise ValueError("need at least one job")
         names = [j.name for j in jobs]
@@ -69,10 +91,15 @@ class SwanRuntime:
         self.energy = energy  # core.energy.EnergyLoan (shared battery)
         self.battery_level = float(battery_level)
         self.energy_unit_j = float(energy_unit_j)  # joules per power unit/tick
+        self.charging = charging  # engine.events.ChargingTrace
+        self.day_ticks = day_ticks  # ticks per "day" for EnergyLoan.repay_daily
+        self.chaos = chaos  # engine.chaos.ChaosInjector
         self.verbose = verbose
         self.work: Dict[str, float] = {j.name: 0.0 for j in self.jobs}
         self.virtual_time_s = 0.0
         self.ticks = 0
+        self.preemptions = 0
+        self._preempted: Set[str] = set()  # jobs paused BY the runtime
 
     # -- shared event sources ------------------------------------------------
     def _advance_trace(self, tick: int, total_power: float) -> None:
@@ -87,14 +114,43 @@ class SwanRuntime:
             self.trace.effective_slowdown(tick, total_power)
 
     def _slowdown_for(self, tick: int, sensitivity: float) -> float:
-        if self.trace is None:
-            return 1.0
-        return self.trace.effective_slowdown(tick, sensitivity)
+        s = 1.0
+        if self.trace is not None:
+            s = self.trace.effective_slowdown(tick, sensitivity)
+        if self.chaos is not None:
+            s *= self.chaos.latency_multiplier(tick)
+        return s
+
+    # -- foreground preemption ----------------------------------------------
+    def _preempt(self, tick: int) -> None:
+        """Pause every preemptible job while a foreground burst is active;
+        resume the ones *this runtime* paused once it clears (a job paused by
+        the caller stays paused)."""
+        unfinished = [j for j in self.jobs if not j.done]
+        fg_active = any(j.is_foreground and j.demands_soc(tick)
+                        for j in unfinished)
+        for job in unfinished:
+            if not job.preemptible:
+                continue
+            if fg_active and not job.paused:
+                job.pause(tick)
+                self._preempted.add(job.name)
+                self.preemptions += 1
+                if self.verbose:
+                    print(f"[swan] tick {tick}: {job.name} paused "
+                          f"(foreground)")
+            elif not fg_active and job.paused and \
+                    job.name in self._preempted:
+                job.resume(tick)
+                self._preempted.discard(job.name)
+                if self.verbose:
+                    print(f"[swan] tick {tick}: {job.name} resumed")
 
     # -- energy --------------------------------------------------------------
     def _account_energy(self, tick: int, total_power: float,
                         active: List[SocJob]) -> Tuple[bool, bool]:
-        """Charge this tick's draw to the shared EnergyLoan. Returns
+        """Charge this tick's draw to the shared EnergyLoan (and repay it
+        while the charger is plugged / at day boundaries). Returns
         (pressed, downgraded): while the borrowed energy would push the
         battery below critical, upgrades are blocked and the hungriest job
         walks one rung toward the low-power end per tick until the ladders
@@ -103,6 +159,12 @@ class SwanRuntime:
         if self.energy is None:
             return False, False
         self.energy.borrow(total_power * self.energy_unit_j)
+        if self.charging is not None:
+            rate = self.charging.rate(tick)
+            if rate > 0.0:
+                self.energy.repay(rate * self.energy_unit_j)
+        if self.day_ticks and tick > 0 and tick % self.day_ticks == 0:
+            self.energy.repay_daily()
         if self.energy.available(self.battery_level):
             return False, False
         cands = [j for j in active if j.can_downgrade()]
@@ -116,22 +178,39 @@ class SwanRuntime:
                    proposals: List[Tuple[SocJob, str]],
                    allow_upgrades: bool = True,
                    allow_downgrades: bool = True) -> None:
+        violators = [j for j in active
+                     if (h := j.slo_headroom()) is not None and h < 0.0]
         downs = [j for j, p in proposals if p == "down"]
-        if downs:
+        if downs or violators:
             if not allow_downgrades:
                 return  # this tick's downgrade allowance is already spent
-            # contention somewhere on the die: downgrade the ONE job whose
-            # next rung relinquishes the most contended resource per unit of
-            # goodput lost — not necessarily the job whose monitor fired
+            # contention somewhere on the die (a pressured monitor, or an SLO
+            # in violation): downgrade the ONE job whose next rung
+            # relinquishes the most contended resource per unit of goodput
+            # lost — but never a job already violating its SLO while a
+            # co-tenant with headroom can shed instead (taking more from the
+            # violator deepens the violation it was meant to fix)
             cands = [j for j in active if j.can_downgrade()]
-            if cands:
-                best = max(cands, key=lambda j: j.relinquish_score())
-                reason = "interference" if best in downs else "arbitration"
+            safe = [j for j in cands if j not in violators]
+            pool = safe or cands
+            if pool:
+                best = max(pool, key=lambda j: j.relinquish_score())
+                if best in downs:
+                    reason = "interference"
+                elif violators:
+                    reason = "slo"
+                else:
+                    reason = "arbitration"
                 self._commit(best, "down", reason, tick)
             return
         if not allow_upgrades:
             return
         ups = [j for j, p in proposals if p == "up"]
+        # an upgrade re-adds power: hold it while any SLO is still violated
+        # (checked above: reaching here means no violators) and never lift a
+        # job into violating its own freshly-met SLO
+        ups = [j for j in ups
+               if (h := j.slo_headroom()) is None or h > 0.0]
         if ups:
             best = max(ups, key=lambda j: j.priority)
             self._commit(best, "up", "clear", tick)
@@ -150,9 +229,16 @@ class SwanRuntime:
         for job in self.jobs:
             job.prepare()
         for tick in range(start, until):
-            active = [j for j in self.jobs if not j.done]
-            if not active:
+            # 0. chaos injection + foreground preemption decide who runs
+            if self.chaos is not None:
+                self.chaos.begin_tick(tick, self)
+            self._preempt(tick)
+            unfinished = [j for j in self.jobs if not j.done]
+            if not unfinished:
                 break
+            active = [j for j in unfinished if not j.paused]
+            for job in active:
+                job.begin_tick(tick)
             # 1. hard events: device loss on the shared pool
             if self.fault_events is not None and self.elastic is not None:
                 failed = tuple(self.fault_events(
@@ -190,6 +276,12 @@ class SwanRuntime:
             for job in active:
                 job.end_tick(tick)
             self.ticks += 1
+        # a burst running past the horizon must not strand paused jobs:
+        # whoever the runtime paused is resumed before the loop closes
+        for job in self.jobs:
+            if job.paused and job.name in self._preempted:
+                job.resume(until)
+                self._preempted.discard(job.name)
         for job in self.jobs:
             job.finalize()
         return self.result()
@@ -199,4 +291,5 @@ class SwanRuntime:
         return RuntimeResult(timeline=merged, ticks=self.ticks,
                              work=dict(self.work),
                              virtual_time_s=self.virtual_time_s,
-                             jobs={j.name: j for j in self.jobs})
+                             jobs={j.name: j for j in self.jobs},
+                             preemptions=self.preemptions)

@@ -59,6 +59,9 @@ class SessionResult:
 
 
 class TrainSession(SocJob):
+    # background personalization training: a foreground burst pauses it
+    preemptible = True
+
     def __init__(self, cfg, rungs: Sequence[Rung], *, optimizer, batch_fn,
                  lr: float = 0.05, compressor=None,
                  ckpt: Optional[CheckpointManager] = None, ckpt_every: int = 0,
@@ -245,6 +248,20 @@ class TrainSession(SocJob):
     def done(self) -> bool:
         return self._prepared and self._step_idx >= self._until
 
+    def _materialize(self, state):
+        """Align a host/checkpoint state with the active rung and place it on
+        the current mesh. A checkpoint may have been written on any rung
+        (e.g. the bf16 bottom), so the parameter dtype is re-aligned here."""
+        state = dict(state)
+        state["params"] = cast_params(state["params"], self.rung.dtype)
+        if self._mesh is not None:
+            host = jax.tree_util.tree_map(
+                lambda a: jax.device_get(a) if hasattr(a, "dtype") else a,
+                state)
+            return shard_restore(host, self._mesh)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.asarray(a) if hasattr(a, "dtype") else a, state)
+
     def prepare(self) -> None:
         if self._prepared:
             return
@@ -259,22 +276,46 @@ class TrainSession(SocJob):
             state = init_train_state(model, self.optimizer,
                                      jax.random.PRNGKey(self._rng_seed),
                                      compressor=self.compressor)
-        else:
-            # a resumed checkpoint may have been written on any rung (e.g.
-            # the bf16 bottom); the session starts on the controller's
-            # active rung, so align the parameter dtype here
-            state = dict(state)
-            state["params"] = cast_params(state["params"], self.rung.dtype)
-        if self._mesh is not None:
-            host = jax.tree_util.tree_map(
-                lambda a: jax.device_get(a) if hasattr(a, "dtype") else a,
-                state)
-            state = shard_restore(host, self._mesh)
-        else:
-            state = jax.tree_util.tree_map(
-                lambda a: jnp.asarray(a) if hasattr(a, "dtype") else a, state)
-        self._state = state
+        self._state = self._materialize(state)
         self._prepared = True
+
+    # -- preemption (foreground bursts) --------------------------------------
+    def on_pause(self, tick: int) -> None:
+        """Checkpoint and *release* the training state — the foreground app
+        that preempted us wants the memory. The checkpoint is labeled with
+        the completed-step count, so resume (or a crash during the pause)
+        restarts exactly at the pre-pause step."""
+        if not self._prepared or self._state is None:
+            return
+        t0 = time.perf_counter()
+        self._ckpt().save(self._step_idx, self._state)
+        self._state = None
+        self.timeline.record_migration(
+            step=self._step_idx, from_rung=self.rung.name,
+            to_rung=self.rung.name, reason="pause", kind="pause",
+            cost_s=round(time.perf_counter() - t0, 6))
+
+    def on_resume(self, tick: int) -> None:
+        """Reload the pause checkpoint through the normal restore machinery.
+        ``restore_latest`` skips a corrupt/torn newest file (chaos: crash
+        mid-write) and falls back to the previous step — in that case the
+        step counter rewinds with the state so no optimizer step is skipped;
+        in the normal case the restored step IS the pre-pause step."""
+        if not self._prepared or self._state is not None:
+            return
+        t0 = time.perf_counter()
+        restored = self._ckpt().restore_latest()
+        if restored is None:
+            raise RuntimeError(
+                f"{self.name}: no readable checkpoint to resume from")
+        step, state = restored
+        self._state = self._materialize(state)
+        self._step_idx = int(step)
+        self._steps_on_rung = 0  # first post-resume step re-warms caches
+        self.timeline.record_migration(
+            step=self._step_idx, from_rung=self.rung.name,
+            to_rung=self.rung.name, reason="resume", kind="pause",
+            cost_s=round(time.perf_counter() - t0, 6))
 
     def on_device_loss(self, tick: int, failed: Sequence[int]) -> None:
         """Device loss forces a downgrade + remesh (the runtime already

@@ -26,8 +26,11 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.energy import EnergyLoan
-from repro.engine.events import InterferenceTrace, ThermalTrace
-from repro.engine.jobs import ServeJob, default_serve_ladder
+from repro.engine.chaos import ChaosInjector
+from repro.engine.events import (ChargingTrace, InterferenceTrace,
+                                 ThermalTrace)
+from repro.engine.jobs import (ForegroundAppJob, ServeJob,
+                               default_serve_ladder)
 from repro.engine.runtime import SwanRuntime
 from repro.engine.rungs import default_rung_ladder
 from repro.engine.session import TrainSession
@@ -41,9 +44,10 @@ from repro.optim.optimizers import adam, sgd
 
 
 def build_jobs(args):
-    """(train_session, serve_job) from the CLI namespace. (The arbitration
-    benchmark builds its own latency-simulated jobs; this is the real-compute
-    construction path.)"""
+    """Job list from the CLI namespace: [train, serve] plus a foreground
+    app when ``--fg-burst`` is given. (The arbitration benchmark builds its
+    own latency-simulated jobs; this is the real-compute construction
+    path.)"""
     cfg_t = get_config(args.arch)
     cfg_s = get_config(args.serve_arch or args.arch)
     if args.reduced:
@@ -69,15 +73,24 @@ def build_jobs(args):
     model = build_model(cfg_s, impl=impl_s)
     params = model.init(jax.random.PRNGKey(0))
     engine = ContinuousBatchingEngine(model, params, max_batch=args.slots,
-                                      max_seq=max_seq)
+                                      max_seq=max_seq,
+                                      admission_policy=args.admission_policy)
     rng = np.random.default_rng(args.seed)
     n_req = args.requests or 3 * args.slots
     reqs = _synthetic_requests(rng, n_req, args.prompt_len, args.gen,
                                cfg_s.vocab_size)
     serve = ServeJob(engine, reqs, rungs=default_serve_ladder(args.slots),
                      name="serve", priority=args.serve_priority,
-                     upgrade_patience=args.upgrade_patience)
-    return train, serve
+                     upgrade_patience=args.upgrade_patience,
+                     slo_p99_s=args.slo_p99 or None)
+    jobs = [train, serve]
+    if args.fg_burst:
+        bursts = []
+        for part in args.fg_burst.split(","):
+            a, b = part.split(":")
+            bursts.append((int(a), int(b)))
+        jobs.append(ForegroundAppJob(bursts=bursts))
+    return jobs
 
 
 def main(argv=None):
@@ -104,6 +117,15 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=12)
     ap.add_argument("--max-seq", type=int, default=0)
+    ap.add_argument("--slo-p99", type=float, default=0.0,
+                    help="p99 per-token latency SLO in seconds (0 = none); "
+                         "the arbiter sheds co-tenants while it is violated "
+                         "and holds upgrades until it recovers")
+    ap.add_argument("--admission-policy", default="serialize",
+                    choices=["serialize", "shed"],
+                    help="under KV-pool pressure: 'serialize' stalls the "
+                         "queue behind the head, 'shed' rejects with a "
+                         "retry-after hint (bounded queue)")
     # shared SoC
     ap.add_argument("--thermal-trace", default="0.2:0.25:3.0",
                     help="shared closed-loop thermal model "
@@ -124,6 +146,21 @@ def main(argv=None):
     ap.add_argument("--battery-j", type=float, default=0.0,
                     help="battery capacity in joules (0 disables the energy "
                          "budget); each tick borrows summed-power joules")
+    ap.add_argument("--charging-trace", default=None,
+                    help="charger plug schedule 'start:stop:watts,...'; "
+                         "repays the energy loan while plugged so upgrades "
+                         "come back")
+    ap.add_argument("--day-ticks", type=int, default=0,
+                    help="ticks per 'day'; at each boundary the energy loan "
+                         "repays the daily charge surplus (0 disables)")
+    ap.add_argument("--fg-burst", default=None,
+                    help="foreground-app bursts 'start:stop,...'; while one "
+                         "is active every preemptible job is paused "
+                         "(training checkpoints + releases its state)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="inject a seeded chaos fault schedule (device "
+                         "loss, pool pressure, torn checkpoints, spikes, "
+                         "fg bursts) over the run")
     ap.add_argument("--timeline-out", default=None,
                     help="write the merged job-tagged timeline JSON here")
     ap.add_argument("--json-out", default=None)
@@ -144,10 +181,17 @@ def main(argv=None):
     if args.battery_j > 0:
         energy = EnergyLoan(battery_j=args.battery_j, daily_charge_j=0.0,
                             daily_usage_j=0.0)
+    charging = ChargingTrace.parse(args.charging_trace) \
+        if args.charging_trace else None
+    chaos = ChaosInjector.random(args.chaos_seed, args.ticks) \
+        if args.chaos_seed is not None else None
 
-    train, serve = build_jobs(args)
-    rt = SwanRuntime([train, serve], trace=trace, energy=energy,
-                     battery_level=args.battery_level, verbose=args.verbose)
+    jobs = build_jobs(args)
+    train, serve = jobs[0], jobs[1]
+    rt = SwanRuntime(jobs, trace=trace, energy=energy,
+                     battery_level=args.battery_level, charging=charging,
+                     day_ticks=args.day_ticks or None, chaos=chaos,
+                     verbose=args.verbose)
     res = rt.run(args.ticks)
 
     s = res.timeline.summary()
@@ -164,14 +208,31 @@ def main(argv=None):
     print(f"[swan] serve: {len(done)} finished, "
           f"{serve.engine.tokens_out} tokens, "
           f"occupancy {serve.engine.occupancy:.2f}")
+    if serve.slo_p99_s is not None:
+        print(f"[swan] serve SLO: {serve.slo_stats()}")
+    if serve.engine.rejected:
+        print(f"[swan] serve rejected: {len(serve.engine.rejected)} "
+              f"(shed {serve.engine.shed_count}, "
+              f"timeout {serve.engine.timeout_count})")
+    if res.preemptions:
+        print(f"[swan] foreground preemptions: {res.preemptions}")
+    if chaos is not None:
+        print(f"[swan] chaos: applied {sorted(chaos.applied)}; "
+              f"{len(chaos.log)} log entries")
     if args.timeline_out:
         res.timeline.save(args.timeline_out)
         print(f"[swan] merged timeline -> {args.timeline_out}")
     if args.json_out:
         payload = {"summary": s, "work": res.work,
                    "virtual_time_s": round(res.virtual_time_s, 6),
+                   "preemptions": res.preemptions,
                    "per_job": {n: res.timeline.for_job(n).summary()
                                for n in res.timeline.jobs()}}
+        if serve.slo_p99_s is not None:
+            payload["slo"] = serve.slo_stats()
+        payload["serve_stats"] = serve.engine.stats()
+        if chaos is not None:
+            payload["chaos"] = chaos.to_json()
         with open(args.json_out, "w") as f:
             json.dump(payload, f, indent=1)
     return res

@@ -62,7 +62,7 @@ from repro.kernels.backend import auto_decode_impl
 from repro.launch.steps import (build_decode_step, build_paged_decode_step,
                                 build_sampler)
 from repro.models.registry import build_model
-from repro.paging import PagedKVCache
+from repro.paging import BlockPoolExhausted, PagedKVCache
 
 # families whose decode state is a slotted (L, B, Smax, ...) KV cache the
 # engine knows how to splice; SSM/hybrid state and encoder-decoder cross
@@ -75,6 +75,11 @@ class Request:
     uid: int
     prompt: np.ndarray  # (P,) int32 prompt tokens
     max_new_tokens: int
+    # graceful degradation: a queued request that has not been admitted
+    # within deadline_steps engine steps of submission is dropped with a
+    # "timeout" rejection instead of waiting forever (None = patient)
+    deadline_steps: Optional[int] = None
+    submitted_at: int = -1  # engine decode_steps at submit(); set by submit
 
 
 @dataclasses.dataclass
@@ -85,6 +90,17 @@ class Finished:
     prompt_len: int
 
 
+@dataclasses.dataclass
+class Rejected:
+    """A request the engine declined instead of serving: load shedding under
+    pool pressure, a queued-deadline timeout, or a drain. ``retry_after`` is
+    the engine's estimate (in decode steps) of when resubmission could
+    succeed — the serving analogue of an HTTP 503 Retry-After."""
+    uid: int
+    reason: str  # "shed" | "timeout" | "draining"
+    retry_after: int
+
+
 class ContinuousBatchingEngine:
     """Slot-based continuous batching over a model's KV-cache decode path."""
 
@@ -93,7 +109,9 @@ class ContinuousBatchingEngine:
                  kv_layout: str = "contig", block_size: int = 16,
                  num_blocks: Optional[int] = None,
                  temperature: float = 0.0, top_k: int = 0,
-                 sample_seed: int = 0, bucket_prompts: bool = False):
+                 sample_seed: int = 0, bucket_prompts: bool = False,
+                 admission_policy: str = "serialize",
+                 max_queue: Optional[int] = None):
         cfg = model.cfg
         if cfg.family not in ENGINE_FAMILIES:
             raise ValueError(
@@ -101,6 +119,9 @@ class ContinuousBatchingEngine:
                 f"{cfg.family!r} is served by the legacy lockstep path")
         if kv_layout not in ("contig", "paged"):
             raise ValueError(f"kv_layout must be contig|paged, got {kv_layout!r}")
+        if admission_policy not in ("serialize", "shed"):
+            raise ValueError(f"admission_policy must be serialize|shed, "
+                             f"got {admission_policy!r}")
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -123,6 +144,26 @@ class ContinuousBatchingEngine:
 
         self.queue: Deque[Request] = collections.deque()
         self.finished: Dict[int, Finished] = {}
+        # graceful degradation under overload (see _admit_waiting):
+        #   "serialize" — head-of-line request waits for resources (the old
+        #     implicit behavior: unbounded queueing, no request is refused);
+        #   "shed" — a request that cannot get resources *now* is rejected
+        #     with a retry-after hint, so admitted requests keep their
+        #     latency instead of everyone missing deadlines together.
+        self.admission_policy = admission_policy
+        # under "shed" the waiting queue is bounded: a submission past the
+        # bound is rejected up front with retry-after rather than parked on
+        # an unbounded queue it may never leave. "serialize" queues without
+        # limit (the implicit legacy behavior).
+        if max_queue is None and admission_policy == "shed":
+            max_queue = 2 * max_batch
+        self.max_queue = max_queue
+        self.accepting = True  # drain() flips this; submit() then rejects
+        self.rejected: Dict[int, Rejected] = {}
+        self.shed_count = 0
+        self.timeout_count = 0
+        self._held_blocks = 0  # pool blocks held by an external co-tenant
+        self._hold_seq = 0
         self.decode_steps = 0
         self.tokens_out = 0
         self._active_slot_steps = 0
@@ -193,7 +234,9 @@ class ContinuousBatchingEngine:
 
     # -- request lifecycle -------------------------------------------------
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Queue a request; returns False (with a ``Rejected`` record) when
+        the engine is draining. Malformed requests still raise."""
         if len(req.prompt) >= self.max_seq:
             raise ValueError(f"prompt {req.uid} ({len(req.prompt)} tokens) "
                              f"does not fit max_seq={self.max_seq}")
@@ -203,7 +246,84 @@ class ContinuousBatchingEngine:
                 f"request {req.uid} ({len(req.prompt)} prompt + "
                 f"{req.max_new_tokens} budget) can never be resident: pool "
                 f"has {self.kv.pool.num_usable} blocks of {self.block_size}")
+        if not self.accepting:
+            self._reject(req, "draining")
+            return False
+        if self.admission_policy == "shed" and self.max_queue is not None \
+                and len(self.queue) >= self.max_queue:
+            self._reject(req, "shed")
+            return False
+        req.submitted_at = self.decode_steps
         self.queue.append(req)
+        return True
+
+    def drain(self) -> None:
+        """Stop admitting: refuse new submissions, shed the waiting queue,
+        let residents stream to completion. Idempotent."""
+        if not self.accepting:
+            return
+        self.accepting = False
+        while self.queue:
+            self._reject(self.queue.popleft(), "draining")
+
+    def _retry_after(self) -> int:
+        """Steps until an admission could plausibly succeed: the shortest
+        remaining generation budget among residents (a slot and its blocks
+        free when one retires), or 1 when the engine is idle."""
+        remaining = [int(self.slot_budget[s]) - len(self.generated[s])
+                     for s in range(self.max_batch)
+                     if self.slot_uid[s] is not None]
+        return max(1, min(remaining)) if remaining else 1
+
+    def _reject(self, req: Request, reason: str) -> None:
+        self.rejected[req.uid] = Rejected(
+            uid=req.uid, reason=reason, retry_after=self._retry_after())
+        if reason == "shed":
+            self.shed_count += 1
+        elif reason == "timeout":
+            self.timeout_count += 1
+
+    def _expire_deadlines(self) -> None:
+        """Drop queued requests whose admission deadline has passed. Only
+        *waiting* requests time out — a request already resident owns its
+        resources and streams to completion."""
+        if not any(r.deadline_steps is not None for r in self.queue):
+            return
+        keep: List[Request] = []
+        for req in self.queue:
+            waited = self.decode_steps - req.submitted_at
+            if req.deadline_steps is not None and \
+                    waited > req.deadline_steps:
+                self._reject(req, "timeout")
+            else:
+                keep.append(req)
+        self.queue = collections.deque(keep)
+
+    # -- external memory pressure (chaos / co-tenant apps) ------------------
+
+    def hold_blocks(self, n: int) -> int:
+        """Let a co-tenant (the chaos injector) take up to ``n`` KV blocks
+        out of the pool. Holds only what residents have not reserved, so a
+        live sequence can never be starved mid-decode — exactly the pressure
+        a neighboring app's allocation puts on admission. Returns the count
+        actually held. No-op (0) under the contig layout."""
+        if self.kv is None:
+            return 0
+        self.release_held()
+        avail = self.kv.pool.num_usable - sum(self._reserved.values())
+        take = max(0, min(int(n), avail, self.kv.pool.num_free))
+        if take:
+            self._hold_seq += 1
+            self.kv.pool.allocate(("__hold__", self._hold_seq),
+                                  take * self.block_size)
+            self._held_blocks = take
+        return take
+
+    def release_held(self) -> None:
+        """Return externally-held blocks to the pool (pressure clears)."""
+        if self._held_blocks:
+            self.kv.pool.free(("__hold__", self._hold_seq))
+            self._held_blocks = 0
 
     def _worst_blocks(self, req: Request) -> int:
         """Blocks the request could ever own: prompt plus generation budget,
@@ -342,31 +462,66 @@ class ContinuousBatchingEngine:
 
     # -- stepping ----------------------------------------------------------
 
+    def _pool_pressure(self, req: Request) -> bool:
+        """True when admitting ``req`` could starve a resident later:
+        its worst case plus every resident's reservation plus externally
+        held blocks would overrun the pool."""
+        if self.kv is None:
+            return False
+        return self._held_blocks + sum(self._reserved.values()) + \
+            self._worst_blocks(req) > self.kv.pool.num_usable
+
     def _admit_waiting(self) -> None:
         for slot in range(self.max_batch):
-            if not self.queue:
-                return
-            if self.slot_cap is not None and \
-                    sum(1 for u in self.slot_uid if u is not None) >= \
-                    self.slot_cap:
-                return
-            if self.slot_uid[slot] is None:
-                if self.kv is not None:
+            while True:
+                if not self.queue or not self.accepting:
+                    return
+                if self.slot_cap is not None and \
+                        sum(1 for u in self.slot_uid if u is not None) >= \
+                        self.slot_cap:
+                    return
+                if self.slot_uid[slot] is not None:
+                    break  # occupied; try the next slot
+                head = self.queue[0]
+                if self._pool_pressure(head):
                     # reserve the head request's worst case against every
-                    # resident's: admission rejects under pool pressure
-                    # (FIFO, retried next step) so allocate-on-boundary can
-                    # never corrupt a live sequence mid-decode
-                    need = self._worst_blocks(self.queue[0])
-                    if sum(self._reserved.values()) + need > \
-                            self.kv.pool.num_usable:
+                    # resident's, so allocate-on-boundary can never corrupt
+                    # a live sequence mid-decode. Under pressure the policy
+                    # decides who pays: "serialize" stalls the whole queue
+                    # behind the head (retried next step); "shed" rejects
+                    # the head with a retry-after hint and lets a smaller
+                    # request behind it take the slot.
+                    if self.admission_policy == "serialize":
                         return
-                self._admit(slot, self.queue.popleft())
+                    # shed the head and move on to the next slot: at most
+                    # max_batch rejections per step, so sustained pressure
+                    # degrades the queue gradually instead of emptying it
+                    # in one tick
+                    self._reject(self.queue.popleft(), "shed")
+                    break
+                req = self.queue.popleft()
+                try:
+                    self._admit(slot, req)
+                except BlockPoolExhausted:
+                    # the reservation check makes this unreachable for the
+                    # engine's own traffic; a racing external allocation
+                    # (between the check and the pool call) can still trip
+                    # it. kv.admit fails atomically before any slot state is
+                    # written, so rolling back the reservation restores the
+                    # engine — then degrade per policy rather than crash.
+                    self._reserved.pop(slot, None)
+                    if self.admission_policy == "serialize":
+                        self.queue.appendleft(req)
+                        return
+                    self._reject(req, "shed")
+                break
 
     def step(self) -> List[Tuple[int, int]]:
         """Admit waiting requests, run one batched decode, retire finishers.
 
         Returns (uid, token) pairs emitted this step.
         """
+        self._expire_deadlines()
         self._admit_waiting()
         active = [s for s in range(self.max_batch) if self.slot_uid[s] is not None]
         if not active:
@@ -446,8 +601,14 @@ class ContinuousBatchingEngine:
                                 sorted(self.prefill_lengths.items())},
             "prefill_compiles": len(self.prefill_lengths),
             "kv_bytes": self.kv_bytes(),
+            "admission_policy": self.admission_policy,
+            "accepting": self.accepting,
+            "shed": self.shed_count,
+            "timeouts": self.timeout_count,
+            "rejected": len(self.rejected),
         }
         if self.kv is not None:
+            out["held_blocks"] = self._held_blocks
             live = {self.slot_uid[s]: int(self.cache_len[s])
                     for s in range(self.max_batch)
                     if self.slot_uid[s] is not None}
@@ -553,6 +714,10 @@ def main(argv=None):
     ap.add_argument("--top-k", type=int, default=0,
                     help="top-k filter for sampling (0 = full vocab)")
     ap.add_argument("--sample-seed", type=int, default=0)
+    ap.add_argument("--admission-policy", default="serialize",
+                    choices=("serialize", "shed"),
+                    help="overload behavior: serialize queues behind the "
+                         "head-of-line request; shed rejects with retry-after")
     ap.add_argument("--bucket-prompts", action="store_true",
                     help="round admission prefill lengths up to power-of-two "
                          "buckets (bounds prefill jit-cache growth)")
@@ -607,7 +772,8 @@ def main(argv=None):
         eos_id=args.eos_id, kv_layout=args.kv_layout,
         block_size=args.block_size, num_blocks=args.kv_blocks,
         temperature=args.temperature, top_k=args.top_k,
-        sample_seed=args.sample_seed, bucket_prompts=args.bucket_prompts)
+        sample_seed=args.sample_seed, bucket_prompts=args.bucket_prompts,
+        admission_policy=args.admission_policy)
     t0 = time.time()
     finished = engine.run(reqs)
     dt = time.time() - t0

@@ -30,9 +30,16 @@ class FaultModel:
         self._rng = np.random.default_rng(self.seed)
 
     def step_failures(self, n_nodes: int) -> np.ndarray:
-        """Bool mask of nodes that fail during this step."""
-        p = 1.0 / max(self.mtbf_steps, 1e-9)
-        return self._rng.random(n_nodes) < p
+        """Bool mask of nodes that fail during this step.
+
+        ``mtbf_steps <= 0`` means "no time between failures": every node
+        fails every step, deterministically — not a division blow-up into a
+        probability of 1e9 that happens to behave the same by accident."""
+        if n_nodes <= 0:
+            return np.zeros(0, dtype=bool)
+        if self.mtbf_steps <= 0:
+            return np.ones(n_nodes, dtype=bool)
+        return self._rng.random(n_nodes) < 1.0 / self.mtbf_steps
 
     def recovery_time(self) -> int:
         return int(self._rng.exponential(self.recovery_steps)) + 1
@@ -47,10 +54,14 @@ class StragglerPolicy:
         return max(k, math.ceil(k * self.over_provision))
 
     def accept(self, latencies: Sequence[float], k: int) -> np.ndarray:
-        """Indices of the first-k finishers within the deadline."""
+        """Indices of the first-k finishers within the deadline. An empty
+        round (every invited node died) accepts nobody rather than warning
+        about the median of nothing."""
         lat = np.asarray(latencies, dtype=np.float64)
+        if lat.size == 0 or k <= 0:
+            return np.zeros(0, dtype=np.int64)
         order = np.argsort(lat)
-        med = float(np.median(lat)) if len(lat) else 0.0
+        med = float(np.median(lat))
         deadline = med * self.deadline_factor
         accepted = [i for i in order if lat[i] <= deadline][:k]
         if len(accepted) < min(k, len(lat)):  # fallback: take fastest k anyway

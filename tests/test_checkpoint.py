@@ -59,3 +59,104 @@ def test_atomicity_no_tmp_left(tmp_path):
     save_pytree({"a": jnp.ones((2,))}, p)
     leftovers = [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
     assert not leftovers
+
+
+# ---------------------------------------------------------------------------
+# crash consistency: checksums, torn writes, fallback restore
+# ---------------------------------------------------------------------------
+
+
+def test_corrupt_payload_detected(tmp_path):
+    from repro.checkpoint.store import CheckpointCorrupt
+    p = str(tmp_path / "c.ckpt")
+    save_pytree({"w": jnp.arange(64, dtype=jnp.float32)}, p)
+    blob = bytearray(open(p, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF  # flip one payload byte
+    with open(p, "wb") as f:
+        f.write(blob)
+    with pytest.raises(CheckpointCorrupt):
+        load_pytree(p)
+
+
+def test_truncated_file_detected(tmp_path):
+    from repro.checkpoint.store import CheckpointCorrupt
+    p = str(tmp_path / "t.ckpt")
+    save_pytree({"w": jnp.arange(64, dtype=jnp.float32)}, p)
+    blob = open(p, "rb").read()
+    with open(p, "wb") as f:
+        f.write(blob[:len(blob) // 2])  # torn mid-write
+    with pytest.raises(CheckpointCorrupt):
+        load_pytree(p)
+
+
+def test_legacy_headerless_checkpoint_still_loads(tmp_path):
+    """Pre-checksum checkpoints (raw compressed msgpack, no magic) load
+    through the legacy fallback path."""
+    from repro.checkpoint.store import _HEADER, serialize_pytree
+    p = str(tmp_path / "legacy.ckpt")
+    blob = serialize_pytree({"w": jnp.full((3,), 2.0)})
+    payload = blob[_HEADER.size:]  # strip magic+crc -> legacy layout
+    with open(p, "wb") as f:
+        f.write(payload)
+    back = load_pytree(p)
+    np.testing.assert_array_equal(np.asarray(back["w"]), np.full((3,), 2.0))
+
+
+def test_restore_latest_falls_back_past_corrupt_newest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    mgr.save(1, {"w": jnp.full((2,), 1.0)})
+    mgr.save(2, {"w": jnp.full((2,), 2.0)})
+    # step 3 is torn mid-write; an orphan .tmp also survives the "crash"
+    blob = open(mgr._path(2), "rb").read()
+    with open(mgr._path(3), "wb") as f:
+        f.write(blob[:10])
+    with open(mgr._path(3) + ".tmp", "wb") as f:
+        f.write(b"\x00" * 8)
+    with pytest.warns(RuntimeWarning, match="unreadable"):
+        step, state = mgr.restore_latest()
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(state["w"]), np.full((2,), 2.0))
+
+
+def test_restore_latest_none_when_everything_corrupt(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    for s in (1, 2):
+        with open(mgr._path(s), "wb") as f:
+            f.write(b"garbage")
+    with pytest.warns(RuntimeWarning):
+        assert mgr.restore_latest() is None
+
+
+def test_retention_never_prunes_just_written(tmp_path):
+    """keep=0 is a misconfiguration; save() must still leave the checkpoint
+    it just wrote on disk."""
+    mgr = CheckpointManager(str(tmp_path), keep=0)
+    mgr.save(1, {"w": jnp.ones((2,))})
+    mgr.save(2, {"w": jnp.ones((2,))})
+    assert mgr.steps() == [2]
+    step, _ = mgr.restore_latest()
+    assert step == 2
+
+
+def test_retention_tolerates_concurrent_unlink(tmp_path):
+    """A pruner racing with another process: the file it wants to unlink is
+    already gone. save() must treat that as success."""
+    mgr = CheckpointManager(str(tmp_path), keep=1)
+    mgr.save(1, {"w": jnp.ones((2,))})
+    mgr.save(2, {"w": jnp.ones((2,))})
+    # simulate the race: step 2 is pruned out from under the manager just
+    # before save(3) runs its retention pass over a stale steps() listing
+    real_steps = CheckpointManager.steps
+
+    def stale_steps(self):
+        out = real_steps(self)
+        if 2 in out:
+            os.unlink(self._path(2))  # racer wins
+        return out
+
+    CheckpointManager.steps = stale_steps
+    try:
+        mgr.save(3, {"w": jnp.ones((2,))})
+    finally:
+        CheckpointManager.steps = real_steps
+    assert 3 in mgr.steps()

@@ -1,0 +1,445 @@
+"""Robustness: SLO arbitration, preemption lifecycle, graceful degradation,
+chaos injection determinism, and property-style interleavings.
+
+Everything here is deterministic — seeded RNGs, scripted schedules, virtual
+latencies — so a failure is a real regression, never flake.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.engine.chaos import KINDS, ChaosEvent, ChaosInjector
+from repro.engine.events import ChargingTrace
+from repro.engine.jobs import PAUSED, RUNNING, ForegroundAppJob
+from repro.engine.runtime import SwanRuntime
+from repro.runtime.fault import FaultModel, StragglerPolicy
+
+
+def _tiny_cfg(name):
+    from repro.configs.base import ModelConfig
+    return ModelConfig(name=name, family="dense", n_layers=2, d_model=32,
+                       n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=128,
+                       tie_embeddings=True, source="tests/test_robustness.py")
+
+
+def _engine(policy="serialize", *, slots=2, max_queue=None, num_blocks=10):
+    from repro.launch.serve import ContinuousBatchingEngine
+    from repro.models.registry import build_model
+    cfg = _tiny_cfg("rb-serve")
+    model = build_model(cfg, impl="naive")
+    params = model.init(jax.random.PRNGKey(0))
+    return ContinuousBatchingEngine(
+        model, params, max_batch=slots, max_seq=32, kv_layout="paged",
+        block_size=4, num_blocks=num_blocks, admission_policy=policy,
+        max_queue=max_queue)
+
+
+def _req(uid, *, n_prompt=5, gen=4, deadline=None):
+    from repro.launch.serve import Request
+    rng = np.random.default_rng(uid)
+    return Request(uid=uid, prompt=rng.integers(0, 64, n_prompt)
+                   .astype(np.int32), max_new_tokens=gen,
+                   deadline_steps=deadline)
+
+
+# ---------------------------------------------------------------------------
+# serve engine: graceful degradation
+# ---------------------------------------------------------------------------
+
+
+def test_shed_policy_bounds_queue_with_retry_after():
+    eng = _engine("shed", max_queue=3)
+    accepted = [eng.submit(_req(i)) for i in range(6)]
+    assert accepted == [True] * 3 + [False] * 3
+    assert eng.shed_count == 3
+    assert all(r.reason == "shed" and r.retry_after >= 1
+               for r in eng.rejected.values())
+    while eng.queue or any(u is not None for u in eng.slot_uid):
+        eng.step()
+    # everything that was admitted finishes; nothing shed ever runs
+    assert sorted(eng.finished) == [0, 1, 2]
+    assert eng.stats()["shed"] == 3
+
+
+def test_serialize_policy_never_refuses():
+    eng = _engine("serialize")
+    for i in range(6):
+        assert eng.submit(_req(i))
+    while eng.queue or any(u is not None for u in eng.slot_uid):
+        eng.step()
+    assert sorted(eng.finished) == list(range(6))
+    assert eng.shed_count == 0 and not eng.rejected
+
+
+def test_pool_pressure_shed_vs_serialize():
+    # 9 usable blocks. The resident (5 prompt + 12 budget) reserves
+    # ceil(17/4)=5; the hold takes the other 4; admitting uid 7 (worst case
+    # 3 more) would over-commit the pool while slot 1 sits free — exactly
+    # the state where the two policies diverge.
+    shed, ser = _engine("shed", num_blocks=10), _engine("serialize",
+                                                        num_blocks=10)
+    for eng in (shed, ser):
+        eng.submit(_req(0, gen=12))
+        eng.step()  # resident admitted into slot 0
+        assert eng.hold_blocks(100) == 4  # chaos co-tenant grabs the rest
+        eng.submit(_req(7))
+        eng.step()  # slot 1 is free, but admission sees pool pressure
+    assert 7 in shed.rejected and shed.rejected[7].reason == "shed"
+    assert 7 not in ser.rejected and [r.uid for r in ser.queue] == [7]
+    ser.release_held()
+    while ser.queue or any(u is not None for u in ser.slot_uid):
+        ser.step()
+    assert 7 in ser.finished  # serialize served it once pressure cleared
+
+
+def test_hold_blocks_never_starves_residents():
+    eng = _engine("shed", num_blocks=10)
+    eng.submit(_req(0, gen=8))
+    eng.step()
+    # residents reserved their worst case; the hold can only take the rest
+    reserved = sum(eng._reserved.values())
+    held = eng.hold_blocks(100)
+    assert held == eng.kv.pool.num_usable - reserved
+    while any(u is not None for u in eng.slot_uid):
+        eng.step()  # decode grows into reserved blocks; must never raise
+    assert 0 in eng.finished
+    assert len(eng.finished[0].tokens) == 8
+
+
+def test_queued_deadline_times_out_waiting_not_resident():
+    eng = _engine("serialize", slots=1)
+    eng.submit(_req(0, gen=6, deadline=50))   # admitted immediately
+    eng.submit(_req(1, gen=4, deadline=2))    # waits behind uid 0, expires
+    for _ in range(10):
+        eng.step()
+    assert 1 in eng.rejected and eng.rejected[1].reason == "timeout"
+    assert eng.timeout_count == 1
+    assert 0 in eng.finished  # the resident was untouched by the deadline
+
+
+def test_drain_sheds_queue_and_finishes_residents():
+    eng = _engine("serialize", slots=1)
+    for i in range(3):
+        eng.submit(_req(i))
+    eng.step()  # uid 0 resident
+    eng.drain()
+    assert not eng.accepting
+    assert {r.reason for r in eng.rejected.values()} == {"draining"}
+    assert not eng.submit(_req(9))  # refused while draining
+    while any(u is not None for u in eng.slot_uid):
+        eng.step()
+    assert 0 in eng.finished and 9 in eng.rejected
+    assert eng.stats()["accepting"] is False
+
+
+# ---------------------------------------------------------------------------
+# job lifecycle + foreground preemption + SLO arbitration
+# ---------------------------------------------------------------------------
+
+
+def _train_job(ticks, *, name="train"):
+    from repro.engine.jobs import trace_latency_fn
+    from repro.engine.rungs import default_rung_ladder
+    from repro.engine.session import TrainSession
+    from repro.launch.train import make_batch_fn
+    from repro.optim.optimizers import sgd
+    cfg = _tiny_cfg("rb-train")
+    rungs = default_rung_ladder(batch=4, microbatch=1, attn_impl="naive",
+                                include_bf16=False)
+    for r in rungs:
+        r.latency_estimate_s = 0.1 * r.rel_latency
+    ses = TrainSession(cfg, rungs, optimizer=sgd(), lr=0.05,
+                       batch_fn=make_batch_fn(cfg, 4, 8),
+                       latency_fn=trace_latency_fn(None), adaptive=False,
+                       verbose=False, name=name)
+    return ses.bind(ticks)
+
+
+def test_foreground_burst_pauses_and_resumes_exactly():
+    ticks = 12
+    train = _train_job(ticks)
+    fg = ForegroundAppJob(bursts=[(4, 7)])
+    rt = SwanRuntime([train, fg])
+    res = rt.run(ticks + 6)  # paused ticks don't train; allow catch-up
+    pauses = [m for m in train.timeline.migrations if m.reason == "pause"]
+    resumes = [m for m in train.timeline.migrations if m.reason == "resume"]
+    assert len(pauses) == 1 and len(resumes) == 1
+    assert pauses[0].step == resumes[0].step  # exact pre-pause step
+    assert res.preemptions == 1
+    steps = [s.step for s in train.timeline.steps]
+    assert steps == list(range(ticks))  # contiguous: nothing lost or redone
+    assert train.state == RUNNING
+
+
+def test_runtime_resumes_paused_jobs_at_horizon():
+    train = _train_job(20)
+    fg = ForegroundAppJob(bursts=[(2, 50)])  # burst outlives the horizon
+    rt = SwanRuntime([train, fg])
+    rt.run(6)
+    assert train.state == RUNNING  # not stranded in PAUSED
+    assert train._state is not None
+
+
+def test_pause_is_idempotent_and_guards_state():
+    train = _train_job(4)
+    train.prepare()
+    train.pause(0)
+    assert train.paused and train.state == PAUSED
+    train.pause(1)  # second pause: no double-checkpoint, no crash
+    assert len([m for m in train.timeline.migrations
+                if m.reason == "pause"]) == 1
+    train.resume(2)
+    assert train.state == RUNNING
+    train.resume(3)  # idempotent
+    assert len([m for m in train.timeline.migrations
+                if m.reason == "resume"]) == 1
+
+
+class _StubJob:
+    """Minimal SocJob surface for arbitration unit tests."""
+
+    def __init__(self, name, *, headroom=None, relinquish=1.0,
+                 priority=1.0):
+        self.name = name
+        self.priority = priority
+        self._headroom = headroom
+        self._relinquish = relinquish
+        self.migrations = []
+        self.paused = False
+
+    def slo_headroom(self):
+        return self._headroom
+
+    def can_downgrade(self):
+        return True
+
+    def relinquish_score(self):
+        return self._relinquish
+
+    def migrate(self, direction, reason, tick):
+        self.migrations.append((direction, reason))
+        return None
+
+
+def _arbitrate(jobs, proposals, **kw):
+    rt = SwanRuntime.__new__(SwanRuntime)
+    rt.verbose = False
+    rt._arbitrate(0, jobs, proposals, **kw)
+
+
+def test_slo_violation_downgrades_cotenant_not_violator():
+    violator = _StubJob("serve", headroom=-0.5, relinquish=10.0)
+    cotenant = _StubJob("train", relinquish=1.0)
+    _arbitrate([violator, cotenant], proposals=[])
+    assert cotenant.migrations == [("down", "slo")]
+    assert violator.migrations == []
+
+
+def test_slo_violation_blocks_upgrades():
+    violator = _StubJob("serve", headroom=-0.1)
+    hopeful = _StubJob("train")
+    _arbitrate([violator, hopeful], proposals=[(hopeful, "up")])
+    assert hopeful.migrations == [("down", "slo")]  # shed, not lifted
+
+
+def test_no_slo_reduces_to_relinquish_auction():
+    a = _StubJob("a", relinquish=5.0)
+    b = _StubJob("b", relinquish=1.0)
+    _arbitrate([a, b], proposals=[(b, "down")])
+    assert a.migrations == [("down", "interference")] or \
+        a.migrations == [("down", "arbitration")]
+    assert b.migrations == []
+
+
+def test_upgrade_needs_positive_headroom():
+    tight = _StubJob("serve", headroom=0.0)
+    _arbitrate([tight], proposals=[(tight, "up")])
+    assert tight.migrations == []
+
+
+# ---------------------------------------------------------------------------
+# chaos injector
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_random_schedule_is_deterministic():
+    a = ChaosInjector.random(3, 64)
+    b = ChaosInjector.random(3, 64)
+    assert a.events == b.events
+    assert {e.kind for e in a.events} == set(KINDS)
+    c = ChaosInjector.random(4, 64)
+    assert c.events != a.events
+
+
+def test_chaos_event_validation():
+    with pytest.raises(ValueError):
+        ChaosEvent(tick=0, kind="meteor_strike")
+    with pytest.raises(ValueError):
+        ChaosEvent(tick=0, kind="fg_burst", duration=0)
+
+
+def test_chaos_latency_multiplier_windows():
+    inj = ChaosInjector([ChaosEvent(tick=4, kind="latency_spike",
+                                    duration=3, magnitude=2.0),
+                         ChaosEvent(tick=5, kind="latency_spike",
+                                    duration=1, magnitude=3.0)])
+    assert inj.latency_multiplier(3) == 1.0
+    assert inj.latency_multiplier(4) == 2.0
+    assert inj.latency_multiplier(5) == 6.0  # overlapping spikes compound
+    assert inj.latency_multiplier(7) == 1.0
+
+
+def test_chaos_skips_absent_targets_loudly():
+    inj = ChaosInjector([ChaosEvent(tick=0, kind="fg_burst"),
+                         ChaosEvent(tick=0, kind="device_loss")])
+    rt = SwanRuntime([_train_job(2)], chaos=inj)
+    rt.run(2)
+    assert inj.skipped_kinds() == {"fg_burst", "device_loss"}
+    assert inj.applied == set()
+
+
+# ---------------------------------------------------------------------------
+# events + energy satellites
+# ---------------------------------------------------------------------------
+
+
+def test_charging_trace_parse_and_rate():
+    tr = ChargingTrace.parse("4:8:5, 6:10:2")
+    assert tr.rate(3) == 0.0
+    assert tr.rate(4) == 5.0
+    assert tr.rate(7) == 7.0  # overlapping chargers sum
+    assert tr.rate(9) == 2.0 and not tr.active(10)
+    with pytest.raises(ValueError):
+        ChargingTrace.parse("5:5:1")
+
+
+def test_energy_repay_floors_at_zero():
+    from repro.core.energy import EnergyLoan
+    loan = EnergyLoan(battery_j=100.0, daily_charge_j=10.0,
+                      daily_usage_j=5.0)
+    loan.borrow(8.0)
+    loan.repay(3.0)
+    assert loan.loan_j == 5.0
+    loan.repay(100.0)
+    assert loan.loan_j == 0.0
+    loan.repay(-4.0)  # negative charger watts never borrow
+    assert loan.loan_j == 0.0
+
+
+# ---------------------------------------------------------------------------
+# fault model hardening + seeded determinism
+# ---------------------------------------------------------------------------
+
+
+def test_fault_model_zero_mtbf_fails_all_deterministically():
+    fm = FaultModel(mtbf_steps=0.0)
+    assert fm.step_failures(4).all()
+    fm2 = FaultModel(mtbf_steps=-1.0)
+    assert fm2.step_failures(3).all()
+
+
+def test_fault_model_empty_pool():
+    fm = FaultModel(mtbf_steps=100.0)
+    assert fm.step_failures(0).shape == (0,)
+
+
+def test_fault_model_seeded_determinism():
+    rolls_a = [FaultModel(mtbf_steps=5.0, seed=9).step_failures(16)
+               for _ in range(1)][0]
+    rolls_b = FaultModel(mtbf_steps=5.0, seed=9).step_failures(16)
+    np.testing.assert_array_equal(rolls_a, rolls_b)
+    rolls_c = FaultModel(mtbf_steps=5.0, seed=10).step_failures(16)
+    assert not np.array_equal(rolls_a, rolls_c)
+
+
+def test_straggler_accept_empty_round():
+    pol = StragglerPolicy()
+    out = pol.accept([], 4)
+    assert out.shape == (0,) and out.dtype == np.int64
+    assert pol.accept([1.0, 2.0], 0).shape == (0,)
+
+
+def test_straggler_deadline_drops_laggard():
+    pol = StragglerPolicy(deadline_factor=1.5)
+    out = pol.accept([1.0, 1.1, 50.0, 0.9], 3)
+    assert len(out) == 3 and 2 not in out
+
+
+def test_straggler_fallback_takes_fastest_k():
+    # fewer than k finish inside the deadline: fall back to the fastest k
+    # rather than stalling the round
+    pol = StragglerPolicy(deadline_factor=1.5)
+    out = pol.accept([1.0, 1.0, 50.0], 3)
+    assert set(out.tolist()) == {0, 1, 2}
+
+
+# ---------------------------------------------------------------------------
+# property-style: seeded interleavings of pause/resume/migrate/tick
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_interleaved_lifecycle_keeps_steps_monotonic(seed, tmp_path):
+    """Any seeded interleaving of tick / pause / resume / migrate leaves the
+    training step counter monotonic (each executed step is the successor of
+    the last) and the checkpoint restorable at the final step."""
+    from repro.checkpoint.manager import CheckpointManager
+    train = _train_job(10_000, name=f"prop-{seed}")
+    train.ckpt = CheckpointManager(str(tmp_path / "ck"), keep=3)
+    train.prepare()
+    rng = np.random.default_rng(seed)
+    executed = []
+    tick = 0
+    for _ in range(30):
+        op = rng.choice(["tick", "pause", "resume", "down", "up"])
+        if op == "tick" and not train.paused:
+            report = train.step(tick)
+            train.observe(tick, report, 1.0)
+            executed.append(train._step_idx)
+            train.end_tick(tick)
+        elif op == "pause" and not train.paused:
+            train.pause(tick)
+        elif op == "resume" and train.paused:
+            train.resume(tick)
+        elif op in ("down", "up") and not train.paused:
+            train.migrate(op, "test", tick)
+        tick += 1
+    if train.paused:
+        train.resume(tick)
+    # monotonic, contiguous: no step lost, none executed twice
+    assert executed == list(range(len(executed)))
+    assert train._step_idx == len(executed)
+    # the session's state survives a final checkpoint round-trip
+    train.ckpt.save(train._step_idx, train._state)
+    step, state = train.ckpt.restore_latest()
+    assert step == train._step_idx
+    leaves = [np.asarray(x) for x in
+              jax.tree_util.tree_leaves(state["params"])]
+    assert all(np.isfinite(leaf).all() for leaf in leaves)
+
+
+def test_interleaving_survives_torn_checkpoint_between_pause_resume(
+        tmp_path):
+    """A torn file appearing after the pause save (chaos: crash mid-write of
+    a NEWER checkpoint) must not derail resume — it falls back to the intact
+    pause checkpoint and the step counter is unchanged."""
+    from repro.checkpoint.manager import CheckpointManager
+    train = _train_job(100)
+    train.ckpt = CheckpointManager(str(tmp_path / "ck"), keep=5)
+    train.prepare()
+    for tick in range(3):
+        report = train.step(tick)
+        train.observe(tick, report, 1.0)
+        train.end_tick(tick)
+    train.pause(3)
+    pre = train._step_idx
+    torn = train.ckpt._path(pre + 1)
+    with open(torn, "wb") as f:
+        f.write(b"SWCK\x01\x00garbage")
+    with pytest.warns(RuntimeWarning, match="unreadable"):
+        train.resume(4)
+    assert train._step_idx == pre
+    report = train.step(5)  # training continues from the exact step
+    train.observe(5, report, 1.0)
+    train.end_tick(5)
+    assert train._step_idx == pre + 1

@@ -173,3 +173,31 @@ def test_checkpoint_restore_across_mesh_change(tmp_path):
     assert any(m["kind"] == "remesh" for m in mig3)
     assert rec["session_final_step"] == 8
     assert all(np.isfinite(rec["session_losses"]))
+
+
+# ---------------------------------------------------------------------------
+# fault schedules: seeded determinism
+# ---------------------------------------------------------------------------
+
+
+def test_fault_model_events_seeded_determinism():
+    """The FaultModel -> runtime event adapter produces the identical
+    device-loss schedule for the same seed — chaos runs and their fault-free
+    controls must disagree only where a fault was injected, never because
+    the fault source itself drifted."""
+    from repro.engine.events import FaultModelEvents
+    from repro.runtime.fault import FaultModel
+
+    def schedule(seed):
+        ev = FaultModelEvents(FaultModel(mtbf_steps=4.0, seed=seed))
+        return [ev(step, range(8)) for step in range(32)]
+
+    assert schedule(11) == schedule(11)
+    assert schedule(11) != schedule(12)
+
+
+def test_scripted_faults_ignore_already_failed():
+    from repro.engine.events import ScriptedFaults
+    ev = ScriptedFaults({3: (1, 5)})
+    assert ev(3, [0, 1, 2, 3]) == (1,)  # device 5 already gone
+    assert ev(4, [0, 1, 2, 3]) == ()
