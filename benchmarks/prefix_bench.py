@@ -1,0 +1,239 @@
+"""Prefix-sharing + host-swap benchmark over the paged serving engine.
+
+Runs a shared-prefix request trace (the system-prompt regime: every request
+carries the same long prefix plus a short unique suffix) through the paged
+continuous-batching engine three ways:
+
+  - ``share``: prefix cache on — admission hash-conses the common prefix
+    blocks, so only the unique-suffix chunks run prefill compute;
+  - ``noshare``: prefix cache off — every request prefills its full prompt
+    (the PR 6 baseline);
+  - ``swap`` / ``serialize``: the same trace on an over-committed pool
+    (too small for all residents' worst case), once with the host-memory
+    swap tier and once with the PR 6 serialize policy, to show swap admits
+    earlier instead of stalling the queue.
+
+Engines are warmed (jit compiles paid on a throwaway prefix of the trace)
+before timing, so the ratio measures steady-state serving, not compilation.
+
+Gates (CI fails the job otherwise; results land in ``BENCH_prefix.json``):
+
+  - token parity: every variant emits byte-identical greedy streams per uid;
+  - hit rate: >= 50% of prompt blocks served from the prefix cache on the
+    timed trace;
+  - throughput: sharing reaches >= 1.3x the no-sharing tokens/sec;
+  - swap: the over-committed pool admits via swap-out (>= 1) with mean
+    admission wait no worse than the serialize baseline's.
+
+Usage:
+  PYTHONPATH=src python benchmarks/prefix_bench.py [--out BENCH_prefix.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _shared_prefix_requests(rng, n: int, *, prefix_len: int, suffix_len: int,
+                            gen: int, vocab: int, uid0: int = 0):
+    """``n`` requests sharing one ``prefix_len``-token prefix, each with a
+    distinct suffix — the shared-system-prompt traffic prefix caching is
+    built for."""
+    from repro.launch.serve import Request
+    prefix = rng.integers(0, vocab, prefix_len).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        sfx = rng.integers(0, vocab, suffix_len).astype(np.int32)
+        reqs.append(Request(uid=uid0 + i,
+                            prompt=np.concatenate([prefix, sfx]),
+                            max_new_tokens=gen))
+    return reqs
+
+
+def _run_trace(engine, reqs):
+    """Warm-started timed run; returns (tokens-by-uid, wall seconds).
+    ``engine.finished`` accumulates across runs, so results are filtered
+    to this trace's uids (the warmup slice used a disjoint uid range)."""
+    uids = {r.uid for r in reqs}
+    t0 = time.perf_counter()
+    finished = engine.run(reqs)
+    dt = time.perf_counter() - t0
+    return {u: f.tokens for u, f in finished.items() if u in uids}, dt
+
+
+def bench_prefix(arch: str = "llama3.2-1b", *, batch: int = 4,
+                 block_size: int = 16, prefix_blocks: int = 6,
+                 suffix_len: int = 8, gen: int = 4, requests: int = 12,
+                 impl: str = "naive", seed: int = 0):
+    """One cell: share vs noshare on a roomy pool, swap vs serialize on an
+    over-committed one. Returns (records, gates)."""
+    from repro.configs import get_config
+    from repro.launch.serve import ContinuousBatchingEngine
+    from repro.models import build_model
+
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg, impl=impl)
+    params = model.init(jax.random.PRNGKey(0))
+
+    prefix_len = prefix_blocks * block_size
+    prompt_len = prefix_len + suffix_len
+    max_seq = 2 * (prompt_len + gen)
+
+    def make_reqs(uid0=0):
+        rng = np.random.default_rng(seed)
+        return _shared_prefix_requests(
+            rng, requests, prefix_len=prefix_len, suffix_len=suffix_len,
+            gen=gen, vocab=cfg.vocab_size, uid0=uid0)
+
+    def make_engine(**kw):
+        return ContinuousBatchingEngine(
+            model, params, max_batch=batch, max_seq=max_seq,
+            kv_layout="paged", block_size=block_size, **kw)
+
+    records, tokens, waits = [], {}, {}
+    # over-committed pool: room for ~half the slots' worst case, so the
+    # trace cannot keep every slot resident without swap or serialization
+    worst = -(-(prompt_len + gen) // block_size)
+    tight_blocks = (batch // 2) * worst + 2
+
+    variants = [
+        ("share", dict(prefix_cache=True)),
+        ("noshare", dict(prefix_cache=False)),
+        ("swap", dict(prefix_cache=False, admission_policy="swap",
+                      num_blocks=tight_blocks)),
+        ("serialize", dict(prefix_cache=False, admission_policy="serialize",
+                           num_blocks=tight_blocks)),
+    ]
+    hit_rate = 0.0
+    for name, kw in variants:
+        engine = make_engine(**kw)
+        # pay every jit compile (prefill chunks, decode, table/COW/swap
+        # helpers) on a warmup slice so the timed run is steady-state; the
+        # slice runs twice so the second pass hits the full-prompt prefix
+        # path and compiles the read-only last-chunk recompute too
+        engine.run(make_reqs(uid0=10_000)[:batch])
+        engine.run(make_reqs(uid0=20_000)[:batch])
+        pre = engine.kv.prefix.stats() if engine.kv.prefix is not None else None
+        toks, dt = _run_trace(engine, make_reqs())
+        tokens[name] = toks
+        stats = engine.stats()
+        timed_tokens = sum(len(t) for t in toks.values())
+        rec = {
+            "bench": "prefix_serve", "shape": arch, "impl": impl,
+            "variant": name, "slots": batch, "block_size": block_size,
+            "prompt_len": prompt_len, "prefix_len": prefix_len,
+            "requests": requests, "tokens": timed_tokens,
+            "wall_s": round(dt, 4),
+            "tok_s": round(timed_tokens / max(dt, 1e-9), 1),
+            "prefill_chunks": stats["prefill_chunks"],
+            "prefill_chunks_skipped": stats["prefill_chunks_skipped"],
+            "cow_copies": stats["cow_copies"],
+            "table_rows_shipped": stats["table_rows_shipped"],
+            "table_uploads": stats["table_uploads"],
+            "swap_outs": stats["swap_outs"],
+            "swap_ins": stats["swap_ins"],
+            "admission_wait_mean": stats["admission_wait_mean"],
+            "peak_blocks": stats["pool"]["peak_blocks_in_use"],
+            "pool_blocks": stats["pool"]["num_blocks"],
+            "status": "ok",
+        }
+        if pre is not None:
+            # hit rate over the timed trace only (warmup seeded the index)
+            post = engine.kv.prefix.stats()
+            lk = post["lookups"] - pre["lookups"]
+            rec["prefix_hit_rate"] = round(
+                (post["hits"] - pre["hits"]) / max(lk, 1), 4)
+            hit_rate = rec["prefix_hit_rate"]
+        records.append(rec)
+        waits[name] = stats["admission_wait_mean"]
+
+    parity = all(tokens[v] == tokens["noshare"]
+                 for v in ("share", "swap", "serialize"))
+    share, noshare = records[0], records[1]
+    speedup = share["tok_s"] / max(noshare["tok_s"], 1e-9)
+    swap_rec = records[2]
+    gates = {
+        "token_parity": parity,
+        "prefix_hit_rate": hit_rate,
+        "hit_rate_gate_50pct": bool(hit_rate >= 0.5),
+        "share_speedup": round(speedup, 2),
+        "speedup_gate_1p3x": bool(speedup >= 1.3),
+        "swap_outs": swap_rec["swap_outs"],
+        "swap_admits_over_committed": bool(
+            swap_rec["swap_outs"] >= 1 and
+            swap_rec["admission_wait_mean"] <= waits["serialize"]),
+    }
+    ok = parity and gates["hit_rate_gate_50pct"] and \
+        gates["speedup_gate_1p3x"] and gates["swap_admits_over_committed"]
+    if not ok:
+        for rec in records:
+            rec["status"] = "error: prefix gates failed " + json.dumps(gates)
+    return records, gates
+
+
+def run(fast: bool = True):
+    """Harness entry (benchmarks/run.py): yields (name, us, derived) rows;
+    raises after the good rows when a gate fails so the failure lands in
+    the harness accounting."""
+    del fast
+    records, gates = bench_prefix()
+    for rec in records:
+        yield (f"prefix_{rec['shape']}_{rec['variant']}",
+               rec["wall_s"] * 1e6,
+               f"tok_s={rec['tok_s']} chunks={rec['prefill_chunks']} "
+               f"skipped={rec['prefill_chunks_skipped']} "
+               f"swap={rec['swap_outs']}/{rec['swap_ins']}")
+    if records[0]["status"] != "ok":
+        raise RuntimeError(f"prefix bench gates failed: {gates}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--prefix-blocks", type=int, default=6)
+    ap.add_argument("--suffix-len", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--impl", default="naive", choices=("naive", "pallas"))
+    ap.add_argument("--out", default="BENCH_prefix.json")
+    args = ap.parse_args()
+
+    records, gates = bench_prefix(
+        args.arch, batch=args.batch, block_size=args.block_size,
+        prefix_blocks=args.prefix_blocks, suffix_len=args.suffix_len,
+        gen=args.gen, requests=args.requests, impl=args.impl)
+    print("name,us_per_call,derived")
+    for rec in records:
+        print(f"prefix_{rec['shape']}_{rec['variant']},"
+              f"{rec['wall_s'] * 1e6:.0f},"
+              f"tok_s={rec['tok_s']} hit={rec.get('prefix_hit_rate', '-')} "
+              f"swap={rec['swap_outs']}/{rec['swap_ins']}")
+
+    payload = {
+        "backend": jax.default_backend(),
+        "interpret": jax.default_backend() != "tpu",
+        **gates,
+        "results": records,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    ok = records[0]["status"] == "ok"
+    print(f"# wrote {args.out} (hit={gates['prefix_hit_rate']} "
+          f"speedup={gates['share_speedup']}x parity="
+          f"{gates['token_parity']} swap_outs={gates['swap_outs']})",
+          file=sys.stderr)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -19,15 +19,15 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names "
                          "(fig1b,fig2,table2,table3,table4,kernels,decode,"
-                         "paged,arbitration,chaos)")
+                         "paged,prefix,arbitration,chaos)")
     ap.add_argument("--json-out", default="BENCH_run.json",
                     help="machine-readable results path ('' disables)")
     args = ap.parse_args()
 
     from benchmarks import (arbitration_bench, chaos_bench, decode_bench,
                             figure1b_matmul, figure2_choices, kernel_bench,
-                            paged_bench, table2_local, table3_interference,
-                            table4_fl)
+                            paged_bench, prefix_bench, table2_local,
+                            table3_interference, table4_fl)
     benches = {
         "fig1b": figure1b_matmul.run,
         "fig2": figure2_choices.run,
@@ -37,6 +37,7 @@ def main() -> None:
         "kernels": lambda: kernel_bench.run(fast=not args.full),
         "decode": lambda: decode_bench.run(fast=not args.full),
         "paged": lambda: paged_bench.run(fast=not args.full),
+        "prefix": lambda: prefix_bench.run(fast=not args.full),
         "arbitration": lambda: arbitration_bench.run(fast=not args.full),
         "chaos": lambda: chaos_bench.run(fast=not args.full),
     }

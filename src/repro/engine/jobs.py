@@ -65,6 +65,10 @@ class StepReport:
     loss: Optional[float] = None  # training jobs report their loss
     warmup: bool = False  # first quantum on a rung (compile tail)
     observed_s: Optional[float] = None  # filled in by observe()
+    # paged serving: fraction of the KV block pool in use at this quantum
+    # (None for jobs without a pool) — the arbiter-visible memory-pressure
+    # signal that complements latency
+    pool_pressure: Optional[float] = None
 
 
 def trace_latency_fn(trace):
@@ -389,9 +393,12 @@ class ServeJob(SocJob):
         if not self._prepared:
             return False
         resident = any(u is not None for u in self.engine.slot_uid)
+        # a sequence swapped to host memory is mid-stream, not finished —
+        # draining included: it owns its admission and must resume
+        swapped = bool(getattr(self.engine, "swapped", None))
         if self.state == DRAINING:
-            return not resident
-        return not self.engine.queue and not resident
+            return not resident and not swapped
+        return not self.engine.queue and not resident and not swapped
 
     def drain(self, tick: int = 0) -> None:
         super().drain(tick)
@@ -434,8 +441,24 @@ class ServeJob(SocJob):
         dt = time.perf_counter() - t0
         warmup = self._steps_on_rung == 0
         self._steps_on_rung += 1
+        kv = getattr(self.engine, "kv", None)
+        pressure = kv.pool.utilization() if kv is not None else None
         return StepReport(latency_s=dt, work=float(len(emitted)),
-                          warmup=warmup)
+                          warmup=warmup, pool_pressure=pressure)
+
+    def pool_stats(self) -> Optional[Dict[str, Any]]:
+        """Block-pool accounting for paged engines (None under contig):
+        the engine's pool/prefix/swap counters, for runtime dashboards."""
+        kv = getattr(self.engine, "kv", None)
+        if kv is None:
+            return None
+        st = self.engine.stats()
+        keys = ("prefill_chunks", "prefill_chunks_skipped", "cow_copies",
+                "table_rows_shipped", "table_uploads", "swapped",
+                "swap_outs", "swap_ins")
+        out = {k: st[k] for k in keys if k in st}
+        out["pool"] = st["pool"]
+        return out
 
     def observe(self, tick: int, report: StepReport,
                 slowdown: float) -> Optional[str]:

@@ -22,11 +22,32 @@ KV layouts (``--kv-layout``):
     pays for a full-length cache whether or not it uses it;
   - ``paged`` stores KV in fixed-size blocks from a shared pool
     (``repro.paging``): admission allocates just the blocks the prompt
-    needs and splices prefill KV block-by-block with one donated scatter,
-    decode allocates on block boundaries, and retirement returns blocks to
-    the pool — peak KV memory tracks *live tokens*, not slots x max_seq.
-    The decode step routes each sequence through its (B, T) block table
-    (scalar-prefetched by the paged flash-decode kernel).
+    needs and ingests the prompt with *chunked paged prefill* — block-sized
+    chunks written straight into pool blocks, no contiguous (1, P, ...)
+    prefill cache, one compile for every prompt length — decode allocates
+    on block boundaries, and retirement returns blocks to the pool — peak
+    KV memory tracks *live tokens*, not slots x max_seq. The decode step
+    routes each sequence through its (B, T) block table (scalar-prefetched
+    by the paged flash-decode kernel); only table rows that changed since
+    the last step are re-shipped to the device.
+
+Prefix sharing (paged; on by default, ``--no-prefix-cache`` disables):
+admission hash-conses prompt-prefix blocks — a request whose prompt prefix
+was already prefilled maps the *same physical blocks* via pool refcounts
+and skips the prefill compute for every hit chunk (a full-prompt hit runs
+one read-only chunk just to recompute the last token's logits). Divergence
+is copy-on-write: the first decode append into a shared block allocates a
+private copy and device-copies the donor block. Retired prompts' blocks
+park on a cached-free LRU tier — still allocatable, but a later identical
+prefix resurrects them for free.
+
+Host swap tier (``--admission-policy swap``): under pool pressure, cold
+resident sequences' blocks are copied to host memory and freed instead of
+serializing or shedding admission (LRU by last swap-in/admit step, with a
+grace period as second chance); swapped sequences restore — bitwise — into
+fresh blocks when headroom returns, with priority over new admissions.
+``hold_blocks()`` co-tenant pressure can likewise force residents out to
+host rather than starving admission.
 
 Sampling: greedy by default; ``--temperature/--top-k`` switch the emitted
 stream to seeded sampling with a per-request PRNG key (a request's stream
@@ -60,7 +81,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.kernels.backend import auto_decode_impl
 from repro.launch.steps import (build_decode_step, build_paged_decode_step,
-                                build_sampler)
+                                build_paged_prefill_step, build_sampler)
 from repro.models.registry import build_model
 from repro.paging import BlockPoolExhausted, PagedKVCache
 
@@ -101,6 +122,26 @@ class Rejected:
     retry_after: int
 
 
+@dataclasses.dataclass
+class SwappedSeq:
+    """A mid-stream sequence whose KV blocks were evicted to host memory.
+
+    Everything needed to resume exactly where it left off: the host copy of
+    its blocks (logical order), the slot bookkeeping, and its worst-case
+    block reservation. Restore is bitwise — the device -> host -> device
+    round trip does not touch the values — so a swapped sequence's stream
+    is token-identical to one that was never swapped."""
+    uid: int
+    generated: List[int]
+    cache_len: int
+    budget: int
+    next_token: int
+    host_kv: object  # numpy tree, leaves (L, n_blocks, block_size, ...)
+    n_blocks: int
+    worst: int  # worst-case block reservation to restore
+    swapped_at: int  # engine decode_steps at swap-out (FIFO restore order)
+
+
 class ContinuousBatchingEngine:
     """Slot-based continuous batching over a model's KV-cache decode path."""
 
@@ -111,7 +152,8 @@ class ContinuousBatchingEngine:
                  temperature: float = 0.0, top_k: int = 0,
                  sample_seed: int = 0, bucket_prompts: bool = False,
                  admission_policy: str = "serialize",
-                 max_queue: Optional[int] = None):
+                 max_queue: Optional[int] = None,
+                 prefix_cache: bool = True, swap_grace: int = 2):
         cfg = model.cfg
         if cfg.family not in ENGINE_FAMILIES:
             raise ValueError(
@@ -119,9 +161,12 @@ class ContinuousBatchingEngine:
                 f"{cfg.family!r} is served by the legacy lockstep path")
         if kv_layout not in ("contig", "paged"):
             raise ValueError(f"kv_layout must be contig|paged, got {kv_layout!r}")
-        if admission_policy not in ("serialize", "shed"):
-            raise ValueError(f"admission_policy must be serialize|shed, "
+        if admission_policy not in ("serialize", "shed", "swap"):
+            raise ValueError(f"admission_policy must be serialize|shed|swap, "
                              f"got {admission_policy!r}")
+        if admission_policy == "swap" and kv_layout != "paged":
+            raise ValueError("admission_policy='swap' needs the paged layout "
+                             "(there are no blocks to evict under contig)")
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -169,6 +214,20 @@ class ContinuousBatchingEngine:
         self._active_slot_steps = 0
         self._uid_prompt_len: Dict[int, int] = {}
         self.prefill_lengths: Dict[int, int] = {}  # padded length -> count
+        # prefix sharing / chunked prefill / swap / dirty-row accounting
+        self.prefill_chunks = 0          # chunk-prefill kernel invocations
+        self.prefill_chunks_skipped = 0  # prompt chunks skipped via prefix hit
+        self.cow_copies = 0              # copy-on-write device block copies
+        self.table_rows_shipped = 0      # dirty block-table rows sent to device
+        self.table_uploads = 0           # full-table uploads (bulk dirt)
+        self.swapped: Dict[int, SwappedSeq] = {}  # uid -> parked sequence
+        self.swap_outs = 0
+        self.swap_ins = 0
+        self.swap_grace = max(0, int(swap_grace))
+        # per-slot step of last admit/swap-in: LRU victim choice + grace
+        self._resident_since = np.zeros(max_batch, np.int64)
+        self.admission_waits: Dict[int, int] = {}  # uid -> steps queued
+        self._stalled_steps = 0
 
         self.temperature = float(temperature)
         self.top_k = int(top_k)
@@ -191,7 +250,7 @@ class ContinuousBatchingEngine:
             if num_blocks is None:
                 num_blocks = max_batch * blocks_per_seq + 1  # +1 null block
             self.kv = PagedKVCache(num_blocks, block_size, max_batch,
-                                   blocks_per_seq)
+                                   blocks_per_seq, prefix_cache=prefix_cache)
             # admission control: worst-case blocks per resident request, so
             # allocate-on-boundary can never exhaust the pool mid-decode
             # (reservation is accounting only — peak_blocks_in_use still
@@ -202,20 +261,45 @@ class ContinuousBatchingEngine:
             # jitted, cache donated; sampling mode reads logits, not argmax
             self._decode = build_paged_decode_step(
                 model, greedy=self._sampler is None)
+            # chunked paged prefill: one compile (traced chunk start / last
+            # pos) ingests any prompt, chunk grid == block grid so prefix
+            # hits skip whole chunks; the read-only variant recomputes the
+            # final chunk of a full-prompt hit without touching the pools
+            self._prefill_chunk = build_paged_prefill_step(model)
+            self._prefill_chunk_ro = build_paged_prefill_step(model,
+                                                              write=False)
+            # device-resident dense block table, updated row-wise from the
+            # host table's dirty set instead of re-uploaded every step
+            self._dev_tables = jnp.asarray(self.kv.tables)
+            self.kv.take_dirty()  # the upload above covered the initial rows
 
-            def paged_splice(cache, pcache, phys):
-                n = phys.shape[0]
+            def set_row(tables, row, values):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    tables, values[None], row, 0)
 
-                def one(pool, pc):
-                    # pool: (L, NB, bs, ...); pc: (L, 1, Lp, ...), Lp >= n*bs
-                    L = pc.shape[0]
-                    blocks = pc[:, 0, :n * block_size].reshape(
-                        (L, n, block_size) + pc.shape[3:])
-                    return pool.at[:, phys].set(blocks.astype(pool.dtype))
+            self._set_row = jax.jit(set_row, donate_argnums=(0,))
 
-                return jax.tree_util.tree_map(one, cache, pcache)
+            def copy_block(cache, src, dst):
+                # COW: duplicate one physical block across every layer's pool
+                def one(pool):  # (L, NB, bs, ...)
+                    return pool.at[:, dst].set(jnp.take(pool, src, axis=1))
 
-            self._splice_paged = jax.jit(paged_splice, donate_argnums=(0,))
+                return jax.tree_util.tree_map(one, cache)
+
+            self._copy_block = jax.jit(copy_block, donate_argnums=(0,))
+
+            def gather_blocks(cache, phys):
+                return jax.tree_util.tree_map(lambda pool: pool[:, phys],
+                                              cache)
+
+            self._gather_blocks = jax.jit(gather_blocks)
+
+            def put_blocks(cache, blocks, phys):
+                return jax.tree_util.tree_map(
+                    lambda pool, b: pool.at[:, phys].set(b.astype(pool.dtype)),
+                    cache, blocks)
+
+            self._put_blocks = jax.jit(put_blocks, donate_argnums=(0,))
         else:
             self.kv = None
             self.cache = model.init_cache(max_batch, max_seq, cache_dtype)
@@ -305,11 +389,21 @@ class ContinuousBatchingEngine:
         """Let a co-tenant (the chaos injector) take up to ``n`` KV blocks
         out of the pool. Holds only what residents have not reserved, so a
         live sequence can never be starved mid-decode — exactly the pressure
-        a neighboring app's allocation puts on admission. Returns the count
-        actually held. No-op (0) under the contig layout."""
+        a neighboring app's allocation puts on admission. Under the swap
+        policy, cold residents are evicted to host memory first so the
+        co-tenant gets its blocks without starving admission afterwards.
+        Returns the count actually held. No-op (0) under the contig layout."""
         if self.kv is None:
             return 0
         self.release_held()
+        if self.admission_policy == "swap":
+            # make room for the co-tenant by parking cold residents on host
+            while self.kv.pool.num_usable - sum(self._reserved.values()) \
+                    < int(n):
+                victim = self._swap_victim()
+                if victim is None:
+                    break
+                self._swap_out(victim)
         avail = self.kv.pool.num_usable - sum(self._reserved.values())
         take = max(0, min(int(n), avail, self.kv.pool.num_free))
         if take:
@@ -324,6 +418,92 @@ class ContinuousBatchingEngine:
         if self._held_blocks:
             self.kv.pool.free(("__hold__", self._hold_seq))
             self._held_blocks = 0
+
+    # -- host-memory swap tier (admission_policy="swap") ---------------------
+
+    def _swap_victim(self) -> Optional[int]:
+        """LRU second-chance victim: the resident slot least recently
+        admitted/swapped-in, skipping slots inside the grace window so a
+        just-restored sequence is not immediately thrashed back out."""
+        cands = [s for s in range(self.max_batch)
+                 if self.slot_uid[s] is not None
+                 and self.decode_steps - self._resident_since[s]
+                 >= self.swap_grace]
+        if not cands:
+            return None
+        return min(cands, key=lambda s: self._resident_since[s])
+
+    def _swap_out(self, slot: int) -> None:
+        """Evict a resident sequence's blocks to host memory and free them.
+
+        The host copy is taken in logical-block order, so swap-in can
+        restore into *any* fresh physical blocks — the round trip is
+        bitwise and the resumed stream is token-identical."""
+        uid = self.slot_uid[slot]
+        blocks = self.kv.slot_blocks(slot)
+        host = jax.tree_util.tree_map(
+            np.asarray,
+            self._gather_blocks(self.cache, jnp.asarray(blocks, jnp.int32)))
+        self.swapped[uid] = SwappedSeq(
+            uid=uid, generated=list(self.generated[slot]),
+            cache_len=int(self.cache_len[slot]),
+            budget=int(self.slot_budget[slot]),
+            next_token=int(self.tokens[slot, 0]), host_kv=host,
+            n_blocks=len(blocks), worst=self._reserved.pop(slot),
+            swapped_at=self.decode_steps)
+        self.slot_uid[slot] = None
+        self.kv.release(slot)
+        self.swap_outs += 1
+
+    def _swap_in(self, slot: int, sw: SwappedSeq) -> None:
+        """Restore a parked sequence into fresh pool blocks and resume."""
+        blocks = self.kv.admit(slot, sw.uid, sw.n_blocks * self.block_size)
+        self.cache = self._put_blocks(
+            self.cache, jax.tree_util.tree_map(jnp.asarray, sw.host_kv),
+            jnp.asarray(blocks, jnp.int32))
+        self._reserved[slot] = sw.worst
+        self.slot_uid[slot] = sw.uid
+        self.slot_budget[slot] = sw.budget
+        self.cache_len[slot] = sw.cache_len
+        self.tokens[slot, 0] = sw.next_token
+        self.generated[slot] = list(sw.generated)
+        self._resident_since[slot] = self.decode_steps
+        self.swap_ins += 1
+
+    def _try_swap_in(self) -> None:
+        """Restore parked sequences (FIFO) into free slots while their
+        worst-case reservation fits. Runs before admission each step —
+        swapped sequences already paid their queueing once."""
+        if not self.swapped:
+            return
+        for uid in sorted(self.swapped, key=lambda u: self.swapped[u].swapped_at):
+            if self.slot_cap is not None and \
+                    sum(1 for u in self.slot_uid if u is not None) >= \
+                    self.slot_cap:
+                return
+            free = [s for s in range(self.max_batch)
+                    if self.slot_uid[s] is None]
+            if not free:
+                return
+            sw = self.swapped[uid]
+            fits = (self._held_blocks + sum(self._reserved.values())
+                    + sw.worst <= self.kv.pool.num_usable) and \
+                self.kv.pool.can_allocate(sw.n_blocks * self.block_size)
+            if not fits:
+                return  # FIFO: later (smaller) sequences must not starve it
+            del self.swapped[uid]
+            self._swap_in(free[0], sw)
+
+    def _make_room(self, worst: int) -> bool:
+        """Swap out LRU residents until a ``worst``-block reservation fits;
+        False when no eligible victim remains (grace-protected or empty)."""
+        while self._held_blocks + sum(self._reserved.values()) + worst \
+                > self.kv.pool.num_usable:
+            victim = self._swap_victim()
+            if victim is None:
+                return False
+            self._swap_out(victim)
+        return True
 
     def _worst_blocks(self, req: Request) -> int:
         """Blocks the request could ever own: prompt plus generation budget,
@@ -359,21 +539,18 @@ class ContinuousBatchingEngine:
 
     def _admit(self, slot: int, req: Request) -> None:
         P = len(req.prompt)
-        Lp = self._prefill_len(P)
-        self.prefill_lengths[Lp] = self.prefill_lengths.get(Lp, 0) + 1
-        batch = {"tokens": jnp.asarray(np.pad(req.prompt, (0, Lp - P)),
-                                       jnp.int32)[None]}
-        if Lp != P:
-            # causal attention keeps every position < P unaffected by the
-            # right-padding; logits must come from the true last token
-            batch["last_pos"] = jnp.int32(P - 1)
-        logits, pcache = self._prefill(self.params, batch)
         if self.kv is not None:
-            self._reserved[slot] = self._worst_blocks(req)
-            blocks = self.kv.admit(slot, req.uid, P)
-            self.cache = self._splice_paged(
-                self.cache, pcache, jnp.asarray(blocks, jnp.int32))
+            logits = self._paged_prefill(slot, req)
         else:
+            Lp = self._prefill_len(P)
+            self.prefill_lengths[Lp] = self.prefill_lengths.get(Lp, 0) + 1
+            batch = {"tokens": jnp.asarray(np.pad(req.prompt, (0, Lp - P)),
+                                           jnp.int32)[None]}
+            if Lp != P:
+                # causal attention keeps every position < P unaffected by the
+                # right-padding; logits must come from the true last token
+                batch["last_pos"] = jnp.int32(P - 1)
+            logits, pcache = self._prefill(self.params, batch)
             self.cache = self._splice(self.cache, pcache, jnp.int32(slot))
         first = self._pick_token(logits[0, -1], req.uid, 0)
         self.slot_uid[slot] = req.uid
@@ -382,9 +559,50 @@ class ContinuousBatchingEngine:
         self.tokens[slot, 0] = first
         self.generated[slot] = [first]
         self._uid_prompt_len[req.uid] = P
+        self._resident_since[slot] = self.decode_steps
+        self.admission_waits[req.uid] = max(
+            0, self.decode_steps - max(req.submitted_at, 0))
         self.tokens_out += 1
         if self._should_retire(slot, first):  # budget of 1, or prefill hit EOS
             self._retire(slot, "eos" if first == self.eos_id else "length")
+
+    def _paged_prefill(self, slot: int, req: Request):
+        """Chunked paged prefill with prefix sharing; returns last-token
+        logits. Cache-hit prefix chunks skip the kernel entirely (their
+        blocks are mapped, already populated); only miss-suffix chunks run,
+        writing prompt KV straight into the slot's pool blocks. A full-prompt
+        hit still runs the *final* chunk read-only — shared blocks must not
+        be rewritten, but the last position's logits are needed to emit the
+        first token."""
+        P = len(req.prompt)
+        bs = self.block_size
+        self._reserved[slot] = self._worst_blocks(req)
+        shared, covered = self.kv.match_prefix(req.prompt)
+        blocks = self.kv.admit(slot, req.uid, P, shared=shared)
+        n_blocks = len(blocks)
+        Lp = n_blocks * bs
+        self.prefill_lengths[Lp] = self.prefill_lengths.get(Lp, 0) + 1
+        table_row = jnp.asarray(self.kv.tables[slot:slot + 1])
+        padded = np.pad(np.asarray(req.prompt, np.int32), (0, Lp - P))
+        first_miss = n_blocks if covered >= P else covered // bs
+        logits = None
+        for c in range(first_miss, n_blocks):
+            toks = jnp.asarray(padded[c * bs:(c + 1) * bs])[None]
+            last = jnp.int32(min(P - 1 - c * bs, bs - 1))
+            logits, self.cache = self._prefill_chunk(
+                self.params, self.cache, toks, jnp.int32(c * bs), table_row,
+                last)
+            self.prefill_chunks += 1
+        self.prefill_chunks_skipped += first_miss
+        if logits is None:  # every block hit: read-only last-chunk recompute
+            c = n_blocks - 1
+            toks = jnp.asarray(padded[c * bs:(c + 1) * bs])[None]
+            logits, _ = self._prefill_chunk_ro(
+                self.params, self.cache, toks, jnp.int32(c * bs), table_row,
+                jnp.int32(P - 1 - c * bs))
+            self.prefill_chunks += 1
+        self.kv.index_prompt(slot, req.prompt)
+        return logits
 
     def _should_retire(self, slot: int, tok: int) -> bool:
         if self.eos_id is not None and tok == self.eos_id:
@@ -456,6 +674,9 @@ class ContinuousBatchingEngine:
         if self.kv is not None:
             self._decode = build_paged_decode_step(
                 model, greedy=self._sampler is None)
+            self._prefill_chunk = build_paged_prefill_step(model)
+            self._prefill_chunk_ro = build_paged_prefill_step(model,
+                                                              write=False)
         else:
             self._decode = build_decode_step(model,
                                              greedy=self._sampler is None)
@@ -490,15 +711,22 @@ class ContinuousBatchingEngine:
                     # decides who pays: "serialize" stalls the whole queue
                     # behind the head (retried next step); "shed" rejects
                     # the head with a retry-after hint and lets a smaller
-                    # request behind it take the slot.
-                    if self.admission_policy == "serialize":
+                    # request behind it take the slot; "swap" parks cold
+                    # residents' blocks on the host to make room, falling
+                    # back to serialize when every resident is grace-
+                    # protected.
+                    if self.admission_policy == "swap" and \
+                            self._make_room(self._worst_blocks(head)):
+                        pass  # pressure cleared; fall through to admission
+                    elif self.admission_policy == "shed":
+                        # shed the head and move on to the next slot: at
+                        # most max_batch rejections per step, so sustained
+                        # pressure degrades the queue gradually instead of
+                        # emptying it in one tick
+                        self._reject(self.queue.popleft(), "shed")
+                        break
+                    else:
                         return
-                    # shed the head and move on to the next slot: at most
-                    # max_batch rejections per step, so sustained pressure
-                    # degrades the queue gradually instead of emptying it
-                    # in one tick
-                    self._reject(self.queue.popleft(), "shed")
-                    break
                 req = self.queue.popleft()
                 try:
                     self._admit(slot, req)
@@ -510,10 +738,11 @@ class ContinuousBatchingEngine:
                     # written, so rolling back the reservation restores the
                     # engine — then degrade per policy rather than crash.
                     self._reserved.pop(slot, None)
-                    if self.admission_policy == "serialize":
+                    if self.admission_policy == "shed":
+                        self._reject(req, "shed")
+                    else:
                         self.queue.appendleft(req)
                         return
-                    self._reject(req, "shed")
                 break
 
     def step(self) -> List[Tuple[int, int]]:
@@ -522,16 +751,49 @@ class ContinuousBatchingEngine:
         Returns (uid, token) pairs emitted this step.
         """
         self._expire_deadlines()
+        if self.swapped:
+            self._try_swap_in()
         self._admit_waiting()
         active = [s for s in range(self.max_batch) if self.slot_uid[s] is not None]
         if not active:
+            # nothing resident but work still pending (queued behind held
+            # blocks, or parked on host with no headroom): guard against a
+            # run() loop that can never make progress
+            if self.queue or self.swapped:
+                self._stalled_steps += 1
+                if self._stalled_steps > 10000:
+                    raise RuntimeError(
+                        f"engine stalled: {len(self.queue)} queued, "
+                        f"{len(self.swapped)} swapped, no admissible slot "
+                        f"for {self._stalled_steps} steps")
             return []
+        self._stalled_steps = 0
         if self.kv is not None:
             for slot in active:  # allocate-on-boundary for this step's write
-                self.kv.append(slot, int(self.cache_len[slot]))
+                ev = self.kv.append(slot, int(self.cache_len[slot]))
+                if ev is not None and ev.kind == "cow":
+                    # first divergent write into a shared block: give this
+                    # sequence a private copy, device-side, before decode
+                    self.cache = self._copy_block(
+                        self.cache, jnp.int32(ev.src), jnp.int32(ev.block))
+                    self.cow_copies += 1
+            rows = self.kv.take_dirty()
+            if rows:
+                # ship only the table rows that changed since last step;
+                # bulk dirt (e.g. after a swap storm) falls back to one
+                # full upload instead of a row-by-row drip
+                if len(rows) > max(1, self.max_batch // 2):
+                    self._dev_tables = jnp.asarray(self.kv.tables)
+                    self.table_uploads += 1
+                else:
+                    for r in rows:
+                        self._dev_tables = self._set_row(
+                            self._dev_tables, jnp.int32(r),
+                            jnp.asarray(self.kv.tables[r]))
+                self.table_rows_shipped += len(rows)
             next_tok, logits, self.cache = self._decode(
                 self.params, self.cache, jnp.asarray(self.tokens),
-                jnp.asarray(self.cache_len), jnp.asarray(self.kv.tables))
+                jnp.asarray(self.cache_len), self._dev_tables)
         else:
             next_tok, logits, self.cache = self._decode(
                 self.params, self.cache, jnp.asarray(self.tokens),
@@ -563,9 +825,16 @@ class ContinuousBatchingEngine:
     def run(self, requests: List[Request]) -> Dict[int, Finished]:
         for req in requests:
             self.submit(req)
-        while self.queue or any(u is not None for u in self.slot_uid):
+        while self.queue or self.swapped or \
+                any(u is not None for u in self.slot_uid):
             self.step()
         return self.finished
+
+    @property
+    def has_work(self) -> bool:
+        """True while anything is queued, resident, or swapped out."""
+        return bool(self.queue) or bool(self.swapped) or \
+            any(u is not None for u in self.slot_uid)
 
     @property
     def occupancy(self) -> float:
@@ -607,8 +876,20 @@ class ContinuousBatchingEngine:
             "timeouts": self.timeout_count,
             "rejected": len(self.rejected),
         }
+        waits = list(self.admission_waits.values())
+        out["admission_wait_mean"] = \
+            round(sum(waits) / len(waits), 3) if waits else 0.0
+        out["admission_wait_max"] = max(waits) if waits else 0
         if self.kv is not None:
             out["held_blocks"] = self._held_blocks
+            out["prefill_chunks"] = self.prefill_chunks
+            out["prefill_chunks_skipped"] = self.prefill_chunks_skipped
+            out["cow_copies"] = self.cow_copies
+            out["table_rows_shipped"] = self.table_rows_shipped
+            out["table_uploads"] = self.table_uploads
+            out["swapped"] = len(self.swapped)
+            out["swap_outs"] = self.swap_outs
+            out["swap_ins"] = self.swap_ins
             live = {self.slot_uid[s]: int(self.cache_len[s])
                     for s in range(self.max_batch)
                     if self.slot_uid[s] is not None}
@@ -715,9 +996,16 @@ def main(argv=None):
                     help="top-k filter for sampling (0 = full vocab)")
     ap.add_argument("--sample-seed", type=int, default=0)
     ap.add_argument("--admission-policy", default="serialize",
-                    choices=("serialize", "shed"),
+                    choices=("serialize", "shed", "swap"),
                     help="overload behavior: serialize queues behind the "
-                         "head-of-line request; shed rejects with retry-after")
+                         "head-of-line request; shed rejects with retry-after; "
+                         "swap parks cold residents' blocks in host memory "
+                         "(paged layout only)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="paged layout: disable prompt-prefix block sharing")
+    ap.add_argument("--swap-grace", type=int, default=2,
+                    help="swap policy: steps a just-admitted/restored "
+                         "sequence is protected from swap-out")
     ap.add_argument("--bucket-prompts", action="store_true",
                     help="round admission prefill lengths up to power-of-two "
                          "buckets (bounds prefill jit-cache growth)")
@@ -773,7 +1061,8 @@ def main(argv=None):
         block_size=args.block_size, num_blocks=args.kv_blocks,
         temperature=args.temperature, top_k=args.top_k,
         sample_seed=args.sample_seed, bucket_prompts=args.bucket_prompts,
-        admission_policy=args.admission_policy)
+        admission_policy=args.admission_policy,
+        prefix_cache=not args.no_prefix_cache, swap_grace=args.swap_grace)
     t0 = time.time()
     finished = engine.run(reqs)
     dt = time.time() - t0
@@ -783,10 +1072,18 @@ def main(argv=None):
           f"steps={engine.decode_steps} occupancy={engine.occupancy:.2f} "
           f"wall={dt*1e3:.0f}ms ({tok_s:.1f} tok/s)")
     if args.kv_layout == "paged":
-        pool = engine.stats()["pool"]
+        st = engine.stats()
+        pool = st["pool"]
         print(f"pool: {pool['peak_blocks_in_use']}/{pool['num_blocks']} peak "
               f"blocks, peak KV {engine.kv_bytes(peak=True)/1e6:.2f}MB "
               f"(contig-equivalent slab would be fully resident)")
+        if "prefix" in pool:
+            pf = pool["prefix"]
+            print(f"prefix: hit_rate={pf['hit_rate']:.2f} "
+                  f"chunks run={st['prefill_chunks']} "
+                  f"skipped={st['prefill_chunks_skipped']} "
+                  f"cow={st['cow_copies']} "
+                  f"swap out/in={st['swap_outs']}/{st['swap_ins']}")
     sample = finished[0].tokens[:12] if 0 in finished else []
     print("sample uid=0:", sample)
     if args.json_out:

@@ -137,6 +137,31 @@ def build_paged_decode_step(model: Model, *, jit: bool = True,
     return jax.jit(decode_step, donate_argnums=(1,) if donate else ())
 
 
+def build_paged_prefill_step(model: Model, *, write: bool = True,
+                             jit: bool = True):
+    """One block-sized chunk of paged prefill, writing prompt KV straight
+    into the pool blocks the chunk's block-table column names.
+
+    ``start`` and ``last_pos`` are traced scalars, so one compile serves
+    every chunk index and every true-last-token position — the chunked
+    prefill loop never grows the jit cache the way per-length contiguous
+    prefill does. ``write=True`` donates the pools (in-place ingestion);
+    ``write=False`` is the read-only full-prefix-hit recompute and leaves
+    the pools untouched (not donated — the engine keeps using them).
+    """
+    if model.paged_prefill_step is None:
+        raise ValueError(f"family {model.cfg.family!r} has no paged "
+                         f"prefill path")
+
+    def prefill_chunk(params, cache, tokens, start, block_table, last_pos):
+        return model.paged_prefill_step(params, cache, tokens, start,
+                                        block_table, last_pos, write)
+
+    if not jit:
+        return prefill_chunk
+    return jax.jit(prefill_chunk, donate_argnums=(1,) if write else ())
+
+
 def build_sampler(temperature: float, top_k: int = 0, *, jit: bool = True):
     """Returns f(logits (B, V), keys (B, 2) uint32) -> (B,) sampled int32 ids.
 

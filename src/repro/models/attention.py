@@ -276,6 +276,101 @@ def _scatter_token_paged(pool, new, cache_len, block_table):
     return pool.at[phys, cl % bs].set(new[:, 0].astype(pool.dtype))
 
 
+def _scatter_chunk_paged(pool, new, start, block_table):
+    """Write one block-aligned chunk ``new`` (B, block_size, ...) into a
+    block pool at virtual positions [start, start + block_size), routed
+    through each sequence's block-table row. ``start`` may be traced (the
+    chunked-prefill loop reuses one compile for every chunk index); it must
+    be a multiple of block_size — the chunk grid *is* the block grid, which
+    is what lets prefix-cache hits skip whole chunks exactly."""
+    bs = pool.shape[1]
+    B = new.shape[0]
+    blk_idx = jnp.clip(jnp.asarray(start, jnp.int32) // bs, 0,
+                       block_table.shape[1] - 1)
+    phys = jax.lax.dynamic_slice_in_dim(
+        jnp.asarray(block_table, jnp.int32), blk_idx, 1, 1)[:, 0]
+    phys = jnp.clip(phys, 0, pool.shape[0] - 1)
+    return pool.at[phys].set(new.astype(pool.dtype))
+
+
+def gqa_prefill_paged(p, x, cache, start, block_table, cfg, *,
+                      write: bool = True):
+    """One chunk of paged prefill: ingest block_size prompt positions
+    starting at ``start`` straight into the KV pools, then attend causally
+    over everything written so far (gathered through the block table).
+
+    ``write=False`` is the full-prefix-hit path: every block is already
+    populated (by the donor sequence that prefilled the identical prefix),
+    so the chunk only *reads* the pools to recompute the last position's
+    activations for logits — no pool mutation, shared blocks stay intact.
+
+    Attention is the naive oracle: the flash kernel bakes ``q_offset`` into
+    its index maps (static), which would force one compile per chunk index;
+    a traced offset keeps the whole prefill at one compile. Prefill impl
+    only affects ingestion — decode keeps its kernel selection.
+    """
+    from repro.paging import gather_paged_kv
+
+    B, C, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, C, cfg.n_heads, hd)
+    k_new = (x @ p["wk"]).reshape(B, C, cfg.n_kv_heads, hd)
+    v_new = (x @ p["wv"]).reshape(B, C, cfg.n_kv_heads, hd)
+    if cfg.pos_embedding == "rope":
+        pos = jnp.asarray(start, jnp.int32) + jnp.arange(C, dtype=jnp.int32)
+        pos = jnp.broadcast_to(pos[None], (B, C))
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k_new = apply_rope(k_new, pos, cfg.rope_theta)
+    if write:
+        ck = _scatter_chunk_paged(cache["k"], k_new, start, block_table)
+        cv = _scatter_chunk_paged(cache["v"], v_new, start, block_table)
+    else:
+        ck, cv = cache["k"], cache["v"]
+    out = naive_attention(q, gather_paged_kv(ck, block_table),
+                          gather_paged_kv(cv, block_table),
+                          causal=True, q_offset=start)
+    y = out.reshape(B, C, cfg.n_heads * hd) @ p["wo"]
+    return y, {"k": ck, "v": cv}
+
+
+def mla_prefill_paged(p, x, cache, start, block_table, cfg, *,
+                      write: bool = True):
+    """One chunk of paged MLA prefill over latent pools.
+
+    Ingests the chunk's normalized latent + rope key into the pools, then
+    reconstructs per-head K/V from the gathered latents (the same
+    ``latent @ wkv_b`` expansion :func:`mla_forward` uses, so chunked
+    ingestion matches the contiguous prefill numerics) and attends causally
+    with a traced ``q_offset``. ``write=False`` as in
+    :func:`gqa_prefill_paged`: read-only recompute on a full prefix hit.
+    """
+    from repro.paging import gather_paged_kv
+
+    B, C, _ = x.shape
+    nope, v_dim = cfg.qk_nope_head_dim, cfg.v_head_dim
+    pos = jnp.asarray(start, jnp.int32) + jnp.arange(C, dtype=jnp.int32)
+    pos = jnp.broadcast_to(pos[None], (B, C))
+    q_nope, q_rope, latent_new, k_rope_new = _mla_qkv(p, x, cfg, pos)
+    if write:
+        lat = _scatter_chunk_paged(cache["latent"], latent_new, start, block_table)
+        kr = _scatter_chunk_paged(cache["k_rope"], k_rope_new, start, block_table)
+    else:
+        lat, kr = cache["latent"], cache["k_rope"]
+    lat_g = gather_paged_kv(lat, block_table)  # (B, S, r)
+    kr_g = gather_paged_kv(kr, block_table)    # (B, S, rope_d)
+    S = lat_g.shape[1]
+    kv = (lat_g.astype(jnp.float32) @ p["wkv_b"]).reshape(
+        B, S, cfg.n_heads, nope + v_dim)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_g[:, :, None, :].astype(jnp.float32),
+                                  (B, S, cfg.n_heads, kr_g.shape[-1]))], -1)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    out = naive_attention(q, k, v, causal=True, q_offset=start)
+    y = out.reshape(B, C, cfg.n_heads * v_dim) @ p["wo"]
+    return y, {"latent": lat, "k_rope": kr}
+
+
 def gqa_decode(p, x, cache, cache_len, cfg, *, cross_kv=None, impl: str = "naive"):
     """One-token decode. x: (B,1,d); cache k/v: (B,Smax,K,hd).
 

@@ -27,6 +27,9 @@ class Model:
     # paged KV layout (dense/moe only): pools + block tables instead of slabs
     init_paged_cache: Optional[Callable] = None  # (num_blocks, block_size, dtype) -> pools
     paged_decode_step: Optional[Callable] = None  # (params, pools, tokens, cache_len, block_table) -> (logits, pools)
+    # chunked paged prefill: ingest one block-sized prompt chunk straight
+    # into the pools (write=False recomputes against prefix-hit blocks)
+    paged_prefill_step: Optional[Callable] = None  # (params, pools, tokens, start, block_table, last_pos, write) -> (logits, pools)
     # the exact build_model kwargs this model was constructed with, so a
     # single-knob rebuild (e.g. serve.set_attn_impl) preserves the rest
     build_kwargs: dict = dataclasses.field(default_factory=dict)
@@ -102,6 +105,13 @@ def build_model(cfg: ModelConfig, *, impl: str = "chunked", chunk: int = 1024,
              transformer.decode_step_decoder(p, cfg, cache, tokens, cache_len,
                                              impl=impl, moe_cf=moe_cf,
                                              block_table=block_table))
+            if cfg.family in ("dense", "moe") else None),
+        paged_prefill_step=(
+            (lambda p, cache, tokens, start, block_table, last_pos=None,
+                    write=True:
+             transformer.paged_prefill_step_decoder(
+                 p, cfg, cache, tokens, start, block_table,
+                 last_pos=last_pos, write=write, moe_cf=moe_cf))
             if cfg.family in ("dense", "moe") else None),
         build_kwargs=kw,
     )

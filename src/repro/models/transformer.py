@@ -15,10 +15,11 @@ import jax.numpy as jnp
 
 from repro.models import ssm
 from repro.models.attention import (attn_params, gqa_decode, gqa_decode_paged,
-                                    gqa_forward, gqa_params, init_gqa_cache,
-                                    init_gqa_pool, init_mla_cache,
-                                    init_mla_pool, mla_decode,
-                                    mla_decode_paged, mla_forward)
+                                    gqa_forward, gqa_params, gqa_prefill_paged,
+                                    init_gqa_cache, init_gqa_pool,
+                                    init_mla_cache, init_mla_pool, mla_decode,
+                                    mla_decode_paged, mla_forward,
+                                    mla_prefill_paged)
 from repro.models.common import (apply_mlp, apply_norm, cross_entropy,
                                  dense_init, embed_tokens, mlp_params,
                                  norm_params)
@@ -472,6 +473,69 @@ def init_paged_cache_decoder(cfg, num_blocks: int, block_size: int,
         else init_gqa_pool(cfg, num_blocks, block_size, dtype)
     return jax.tree_util.tree_map(
         lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape).copy(), per)
+
+
+def paged_prefill_step_decoder(params, cfg, cache, tokens, start, block_table,
+                               *, last_pos=None, write: bool = True,
+                               moe_cf=1.25):
+    """One block-sized chunk of paged prefill for dense/moe stacks.
+
+    tokens: (B, block_size) int32 — one chunk of the (right-padded) prompt;
+    ``start`` (traced scalar) is its first virtual position, always a block
+    multiple so the chunk occupies exactly one block-table column. KV is
+    written straight into the (L, num_blocks, block_size, ...) pools through
+    each layer's scatter — there is no contiguous (1, P, ...) prefill cache
+    to splice afterwards. ``write=False`` recomputes activations against
+    already-populated (prefix-hit) blocks without touching the pools.
+
+    Returns (logits, cache): logits of position ``last_pos`` within the
+    chunk (``None`` = final position), as :func:`_last_logits`.
+
+    MoE note: routing capacity depends on the tokens routed together, so a
+    chunk routes independently of the full-prompt pass; with a saturating
+    capacity factor (no drops) the two are token-identical, otherwise
+    chunked prefill may drop differently than contiguous prefill would.
+    """
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(f"paged prefill needs a dense/moe KV cache, "
+                         f"got {cfg.family!r}")
+    h = embed_tokens(params["embed"], tokens)
+
+    def make_body(moe_layer):
+        def body(carry, xs):
+            hh = carry
+            lp, lcache = xs
+            x = apply_norm(lp["ln1"], hh, cfg.norm)
+            if cfg.use_mla:
+                a, lnew = mla_prefill_paged(lp["attn"], x, lcache, start,
+                                            block_table, cfg, write=write)
+            else:
+                a, lnew = gqa_prefill_paged(lp["attn"], x, lcache, start,
+                                            block_table, cfg, write=write)
+            hh = hh + a
+            x = apply_norm(lp["ln2"], hh, cfg.norm)
+            if moe_layer:
+                m, _ = apply_moe(lp["moe"], x, cfg, capacity_factor=moe_cf)
+            else:
+                m = apply_mlp(lp["mlp"], x, cfg.activation)
+            return hh + m, lnew
+
+        return body
+
+    if cfg.is_moe and cfg.first_k_dense:
+        kd = cfg.first_k_dense
+        cache_dense = jax.tree_util.tree_map(lambda a: a[:kd], cache)
+        cache_moe = jax.tree_util.tree_map(lambda a: a[kd:], cache)
+        h, new_dense = jax.lax.scan(make_body(False), h,
+                                    (params["dense_layers"], cache_dense))
+        h, new_moe = jax.lax.scan(make_body(True), h, (params["layers"], cache_moe))
+        new_cache = jax.tree_util.tree_map(
+            lambda a, b: jnp.concatenate([a, b], 0), new_dense, new_moe)
+    else:
+        h, new_cache = jax.lax.scan(make_body(cfg.is_moe), h,
+                                    (params["layers"], cache))
+
+    return _last_logits(params, cfg, h, last_pos), new_cache
 
 
 def decode_step_decoder(params, cfg, cache, tokens, cache_len, *, impl="chunked",

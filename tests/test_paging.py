@@ -304,3 +304,311 @@ def test_engine_bucketing_bounds_prefill_compiles_token_identical():
     # 6 distinct lengths (3..8) collapse onto power-of-two buckets {4, 8}
     assert bucket_engine.stats()["prefill_compiles"] == 2
     assert set(bucket_engine.stats()["prefill_buckets"]) == {"4", "8"}
+
+
+# ---------------------------------------------------------------------------
+# refcounts, COW, cached-free tier, prefix index
+# ---------------------------------------------------------------------------
+
+
+def test_block_pool_cow_on_shared_block():
+    pool = BlockPool(num_blocks=8, block_size=4)
+    a = pool.allocate("a", 8)
+    b = pool.allocate("b", 8, shared=a)  # full prefix hit: same physicals
+    assert pool.block_table("b") == a
+    assert pool.refcount(a[0]) == 2 and pool.shared_blocks == 2
+    ev = pool.append_token("b", 7)  # write inside shared block 1 -> COW
+    assert ev is not None and ev.kind == "cow" and ev.src == a[1]
+    assert pool.block_table("b")[1] == ev.block != a[1]
+    assert pool.block_table("a") == a  # the donor's table is untouched
+    assert pool.refcount(a[1]) == 1 and pool.refcount(ev.block) == 1
+    assert pool.append_token("b", 7) is None  # private now: no second copy
+    pool.free("a")
+    pool.free("b")
+    pool.check_invariants()
+    assert pool.blocks_in_use == 0 and pool.stats()["total_cow"] == 1
+
+
+def test_block_pool_cached_free_resurrection_and_eviction():
+    pool = BlockPool(num_blocks=6, block_size=4)
+    evicted = []
+    indexed = set()
+    pool.cache_filter = lambda blk: blk in indexed
+    pool.on_evict = lambda blk: (indexed.discard(blk), evicted.append(blk))
+    a = pool.allocate("a", 12)
+    indexed.update(a)
+    pool.free("a")
+    # indexed blocks park on the cached tier: evictable, hence still "free"
+    assert pool.num_cached == 3 and pool.num_free == 5
+    b = pool.allocate("b", 12, shared=a[:2])  # prefix hit resurrects two
+    assert pool.block_table("b")[:2] == a[:2] and pool.num_cached == 1
+    pool.allocate("c", 8)  # overflows the free list: evicts the cached LRU
+    # the eviction callback purged the index, so the prefix layer can never
+    # offer the recycled block as a hit again
+    assert evicted == [a[2]] and a[2] not in indexed
+    pool.check_invariants()
+
+
+def test_prefix_index_full_partial_and_chained_semantics():
+    from repro.paging import PrefixIndex
+    idx = PrefixIndex(block_size=4)
+    toks = np.arange(10, dtype=np.int32)  # 2 full blocks + 2-token tail
+    idx.insert(toks, [5, 6, 7])
+    assert idx.match(toks) == ([5, 6, 7], 10)  # full-prompt hit incl. tail
+    # same full prefix, different/longer tail: full blocks only — the
+    # partial block must never be mapped into a prompt that extends it
+    longer = np.concatenate([toks[:8], np.array([1, 2, 3], np.int32)])
+    assert idx.match(longer) == ([5, 6], 8)
+    # diverging first block: nothing matches
+    assert idx.match(np.arange(1, 11, dtype=np.int32)) == ([], 0)
+    # identical block *content* at a different position must not hit
+    # (keys are chained digests, not per-block content hashes)
+    shifted = np.concatenate([np.full(4, 9, np.int32), toks[:4]])
+    assert idx.match(shifted) == ([], 0)
+    idx.forget_block(6)  # pool recycled it: the chain stops before it
+    assert idx.match(toks) == ([5], 4)
+    assert idx.stats()["hit_rate"] > 0
+
+
+# ---------------------------------------------------------------------------
+# engine: prefix sharing, COW, swap tier, dirty-row shipping
+# ---------------------------------------------------------------------------
+
+
+def test_engine_prefix_sharing_token_identical_and_skips_chunks():
+    """Shared-prefix traffic: sharing on == sharing off, token for token,
+    while skipping the hit chunks' prefill compute entirely."""
+    _, model, params = _make()
+    rng = np.random.default_rng(2)
+    prefix = rng.integers(0, 64, 12).astype(np.int32)  # 3 full blocks of 4
+    reqs = [Request(uid=i, prompt=np.concatenate(
+                [prefix, rng.integers(0, 64, 2 + i).astype(np.int32)]),
+                    max_new_tokens=3) for i in range(4)]
+    eng_off, off = _run_stream(model, params, layout="paged", impl_reqs=reqs,
+                               block_size=4, prefix_cache=False)
+    eng_on, on = _run_stream(model, params, layout="paged", impl_reqs=reqs,
+                             block_size=4)
+    assert on == off
+    st = eng_on.stats()
+    assert st["prefill_chunks_skipped"] > 0
+    assert st["prefill_chunks"] < eng_off.stats()["prefill_chunks"]
+    assert eng_off.stats()["prefill_chunks_skipped"] == 0
+    assert st["pool"]["prefix"]["hit_rate"] > 0
+    assert st["pool"]["total_shares"] > 0
+
+
+def test_engine_prefix_cow_on_identical_prompts():
+    """Concurrent identical prompts share every block including the partial
+    tail; each follower's first decode append pays exactly one COW copy and
+    all streams stay identical to the unshared run."""
+    _, model, params = _make()
+    prompt = np.arange(3, 13, dtype=np.int32)  # 10 tokens: partial tail
+    reqs = [Request(uid=i, prompt=prompt.copy(), max_new_tokens=4)
+            for i in range(3)]
+    _, off = _run_stream(model, params, layout="paged", impl_reqs=reqs,
+                         block_size=4, max_batch=3, prefix_cache=False)
+    eng_on, on = _run_stream(model, params, layout="paged", impl_reqs=reqs,
+                             block_size=4, max_batch=3)
+    assert on == off
+    assert all(on[0] == on[u] for u in on)
+    st = eng_on.stats()
+    # 3 sequences share the tail block; the last owner standing appends in
+    # place, so exactly two divergences pay a copy
+    assert st["cow_copies"] == 2
+    assert st["pool"]["total_cow"] == st["cow_copies"]
+    assert st["pool"]["blocks_in_use"] == 0
+
+
+def test_engine_swap_token_identical_over_committed_pool():
+    """A pool too small for two residents' worst case: the swap policy
+    parks cold residents on the host instead of serializing, and the
+    resumed streams are token-identical to the roomy-pool run."""
+    _, model, params = _make()
+    reqs = [Request(uid=i, prompt=np.arange(2, 10, dtype=np.int32),
+                    max_new_tokens=4) for i in range(3)]
+    _, roomy = _run_stream(model, params, layout="paged", impl_reqs=reqs,
+                           block_size=4, max_batch=2)
+    engine, tight = _run_stream(model, params, layout="paged", impl_reqs=reqs,
+                                block_size=4, max_batch=2, num_blocks=6,
+                                admission_policy="swap", prefix_cache=False)
+    assert tight == roomy
+    st = engine.stats()
+    assert st["swap_outs"] >= 1 and st["swap_outs"] == st["swap_ins"]
+    assert st["swapped"] == 0  # everyone came back and finished
+    assert st["pool"]["blocks_in_use"] == 0
+    assert len(engine.finished) == len(reqs)
+
+
+def test_engine_swap_policy_requires_paged_layout():
+    _, model, params = _make()
+    with pytest.raises(ValueError, match="paged"):
+        ContinuousBatchingEngine(model, params, max_batch=2, max_seq=32,
+                                 kv_layout="contig",
+                                 admission_policy="swap")
+
+
+def test_engine_dirty_rows_ship_only_changes():
+    """Block-table rows reach the device only when they change; the
+    device-resident table stays consistent with the host table."""
+    _, model, params = _make()
+    engine, _ = _run_stream(model, params, layout="paged",
+                            impl_reqs=_ragged_reqs(), block_size=4)
+    st = engine.stats()
+    assert st["table_rows_shipped"] > 0
+    # re-uploading every row every step would have moved far more rows
+    assert st["table_rows_shipped"] < engine.decode_steps * engine.max_batch
+    pending = set(engine.kv.take_dirty())  # releases after the last decode
+    dev = np.asarray(engine._dev_tables)
+    for row in range(engine.max_batch):
+        if row not in pending:
+            np.testing.assert_array_equal(dev[row], engine.kv.tables[row])
+
+
+# ---------------------------------------------------------------------------
+# random interleaving machine (shared with tests/test_property.py)
+# ---------------------------------------------------------------------------
+
+
+def _drive_pool_machine(seed: int, steps: int = 150, num_blocks: int = 10,
+                        block_size: int = 4) -> None:
+    """Random admit/share/append(+COW)/publish/free/swap interleaving
+    against a shadow value model. After every op: pool conservation holds
+    (no leaked or double-freed block, the null block never freed or
+    mapped), every live sequence still reads the values it wrote (COW
+    isolation), and host swap round-trips are value-identical."""
+    rng = np.random.default_rng(seed)
+    pool = BlockPool(num_blocks, block_size)
+    indexed = set()
+    published = {}  # pid -> tuple of blocks (a fake prefix-cache entry)
+
+    def on_evict(blk):
+        indexed.discard(blk)
+        for pid in [p for p, blks in published.items() if blk in blks]:
+            del published[pid]
+
+    pool.cache_filter = lambda blk: blk in indexed
+    pool.on_evict = on_evict
+
+    content = {}  # physical block -> last stamped value ("device data")
+    live = {}     # seq -> {"tokens": int, "vals": [value per logical block]}
+    parked = {}   # seq -> (tokens, host values) — swapped to "host memory"
+    counters = {"seq": 0, "stamp": 0, "pid": 0}
+
+    def stamp():
+        counters["stamp"] += 1
+        return counters["stamp"]
+
+    def pick(d):
+        return list(d)[int(rng.integers(0, len(d)))]
+
+    for _ in range(steps):
+        op = int(rng.integers(0, 12))
+        if op <= 2:  # admit a fresh sequence
+            n = int(rng.integers(1, 3 * block_size + 1))
+            sid = counters["seq"]
+            counters["seq"] += 1
+            try:
+                blocks = pool.allocate(sid, n)
+            except BlockPoolExhausted:
+                assert pool.owned_blocks(sid) == 0  # failed atomically
+            else:
+                for blk in blocks:
+                    content[blk] = stamp()
+                live[sid] = {"tokens": n,
+                             "vals": [content[b] for b in blocks]}
+        elif op <= 4 and published:  # admit sharing a published prefix
+            shared = list(published[pick(published)])
+            k = int(rng.integers(1, len(shared) + 1))
+            shared = shared[:k]
+            n = (k - 1) * block_size + int(rng.integers(1, block_size + 1))
+            sid = counters["seq"]
+            counters["seq"] += 1
+            try:
+                blocks = pool.allocate(sid, n, shared=shared)
+            except BlockPoolExhausted:
+                assert pool.owned_blocks(sid) == 0
+            else:
+                assert blocks[:k] == shared
+                live[sid] = {"tokens": n,
+                             "vals": [content[b] for b in blocks]}
+        elif op <= 7 and live:  # append one token: alloc / COW / in place
+            sid = pick(live)
+            st = live[sid]
+            if st["tokens"] >= 4 * block_size:
+                continue  # cap one sequence's appetite
+            pos = st["tokens"]
+            idx = pos // block_size
+            try:
+                ev = pool.append_token(sid, pos)
+            except BlockPoolExhausted:
+                continue  # boundary alloc failed; table untouched
+            st["tokens"] = pos + 1
+            if ev is None:
+                blk = pool.block_table(sid)[idx]
+                # in-place writes are only legal into private blocks
+                assert pool.refcount(blk) == 1
+                content[blk] = stamp()
+                st["vals"][idx] = content[blk]
+            elif ev.kind == "cow":
+                content[ev.block] = stamp()  # device copy + the new write
+                st["vals"][idx] = content[ev.block]
+                assert pool.refcount(ev.block) == 1
+            else:  # boundary alloc
+                content[ev.block] = stamp()
+                st["vals"].append(content[ev.block])
+                assert len(st["vals"]) == idx + 1
+        elif op == 8 and live:  # publish (prefix-index) a live table
+            blocks = pool.block_table(pick(live))
+            indexed.update(blocks)
+            published[counters["pid"]] = tuple(blocks)
+            counters["pid"] += 1
+        elif op == 9 and live:  # retire
+            sid = pick(live)
+            table = pool.block_table(sid)
+            pool.free(sid)
+            del live[sid]
+            for blk in table:
+                if pool.refcount(blk) == 0 and blk in indexed:
+                    assert pool.is_cached(blk)  # parked for reuse, not lost
+        elif op == 10 and live:  # swap out: host copy, then free the blocks
+            sid = pick(live)
+            st = live.pop(sid)
+            parked[sid] = (st["tokens"],
+                           [content[b] for b in pool.block_table(sid)])
+            pool.free(sid)
+        elif parked:  # swap in: fresh blocks, restored values
+            sid = pick(parked)
+            tokens, host = parked[sid]
+            try:
+                blocks = pool.allocate(sid, tokens)
+            except BlockPoolExhausted:
+                assert pool.owned_blocks(sid) == 0
+            else:
+                del parked[sid]
+                for blk, val in zip(blocks, host):
+                    content[blk] = val
+                live[sid] = {"tokens": tokens, "vals": list(host)}
+                # the host round trip restored every value exactly
+                assert [content[b]
+                        for b in pool.block_table(sid)] == host
+        pool.check_invariants()
+        for sid, st in live.items():
+            table = pool.block_table(sid)
+            assert len(table) == len(st["vals"])
+            for blk, want in zip(table, st["vals"]):
+                assert content[blk] == want, \
+                    f"seed {seed}: seq {sid} block {blk} corrupted"
+            assert BlockPool.NULL_BLOCK not in table
+
+    for sid in list(live):
+        pool.free(sid)
+    pool.check_invariants()
+    assert pool.blocks_in_use == 0  # nothing leaked (cached is reclaimable)
+    assert pool.refcount(BlockPool.NULL_BLOCK) == 1
+
+
+def test_block_pool_random_interleaving_invariants():
+    """Deterministic sweep of the machine (tests/test_property.py drives the
+    same machine under hypothesis when it is installed)."""
+    for seed in range(20):
+        _drive_pool_machine(seed)

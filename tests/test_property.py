@@ -109,3 +109,31 @@ def test_compression_ratio_bounds(frac, use_int8):
     scheme = (("int8+" if use_int8 else "") + f"topk:{frac}")
     r = Compressor(scheme).ratio()
     assert 0 < r <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# paged KV block pool: refcount / COW / prefix-cache / swap interleavings
+# ---------------------------------------------------------------------------
+
+# the machine (random op schedule + shadow value model + invariant checks)
+# lives next to the deterministic paging tests; hypothesis drives it over a
+# much wider seed/length space and shrinks failures
+from test_paging import _drive_pool_machine  # noqa: E402
+
+
+@given(st.integers(0, 2 ** 32 - 1), st.integers(20, 250))
+@settings(max_examples=40, deadline=None)
+def test_block_pool_interleavings_no_leak_no_corruption(seed, steps):
+    """Random admit/share/COW/free/swap schedules: no block is leaked or
+    double-freed, the null block is never freed or mapped, every sequence
+    reads back exactly the values it wrote, and host swap round-trips are
+    value-identical."""
+    _drive_pool_machine(seed, steps=steps)
+
+
+@given(st.integers(0, 2 ** 32 - 1))
+@settings(max_examples=15, deadline=None)
+def test_block_pool_interleavings_tiny_pool(seed):
+    """Same machine under heavy pressure (4 usable blocks): allocation
+    failures must be atomic and the cached tier must still balance."""
+    _drive_pool_machine(seed, steps=80, num_blocks=5, block_size=2)
