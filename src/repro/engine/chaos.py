@@ -231,3 +231,128 @@ class ChaosInjector:
         return {"events": [dataclasses.asdict(e) for e in self.events],
                 "applied": sorted(self.applied),
                 "log": self.log}
+
+
+# ---------------------------------------------------------------------------
+# Fleet-scale fault classes (injected through the FleetCoordinator)
+# ---------------------------------------------------------------------------
+
+FLEET_KINDS = ("client_churn", "update_dropped", "update_duplicated",
+               "update_corrupt", "coordinator_crash")
+
+
+class FleetChaos:
+    """Coordinator-level fault injection for federated rounds.
+
+    Where :class:`ChaosInjector` breaks a single SoC's runtime, this breaks
+    the *fleet* around it — the network and the coordinator process:
+
+    - ``client_churn``       — an invited client vanishes mid-round (user
+                               closed the app / lost connectivity); it never
+                               reports, the coordinator must degrade to a
+                               smaller accepted set.
+    - ``update_dropped``     — a finished client's update is lost in
+                               delivery; same coordinator-side symptom as
+                               churn but after the work (and energy) was
+                               spent.
+    - ``update_duplicated``  — at-least-once delivery re-sends an update;
+                               the coordinator must dedup by client id or it
+                               double-counts.
+    - ``update_corrupt``     — bit-flip in transit; the payload no longer
+                               matches its checksum and must be rejected.
+    - ``coordinator_crash``  — the coordinator process dies mid-aggregation,
+                               after ``crash_at[1]`` updates of round
+                               ``crash_at[0]`` were accepted; resume must
+                               neither lose nor double-count them.
+
+    All decisions are stateless functions of ``(seed, round, client)`` so a
+    crash-resumed coordinator sees the identical fault schedule.
+    """
+
+    def __init__(self, seed: int = 0, *, churn_prob: float = 0.0,
+                 churn_rounds: Optional[Dict[int, float]] = None,
+                 drop_prob: float = 0.0, dup_prob: float = 0.0,
+                 corrupt_prob: float = 0.0,
+                 crash_at: Optional[Tuple[int, int]] = None):
+        self.seed = int(seed)
+        self.churn_prob = float(churn_prob)
+        self.churn_rounds = dict(churn_rounds or {})
+        self.drop_prob = float(drop_prob)
+        self.dup_prob = float(dup_prob)
+        self.corrupt_prob = float(corrupt_prob)
+        self.crash_at = tuple(crash_at) if crash_at is not None else None
+        self._crash_fired = False
+        self.log: List[Dict[str, Any]] = []
+        self.applied: Set[str] = set()
+
+    # -- schedule -------------------------------------------------------------
+    def churn_fraction(self, rnd: int) -> float:
+        return float(self.churn_rounds.get(int(rnd), self.churn_prob))
+
+    def churn(self, rnd: int, cids: Sequence[int]) -> Set[int]:
+        """Subset of the invited cohort that silently vanishes this round."""
+        p = self.churn_fraction(rnd)
+        if p <= 0.0 or not len(cids):
+            return set()
+        rng = np.random.default_rng((self.seed, int(rnd), 101))
+        mask = rng.random(len(cids)) < p
+        gone = {int(c) for c, m in zip(cids, mask) if m}
+        if gone:
+            self.applied.add("client_churn")
+            self.log.append({"round": int(rnd), "kind": "client_churn",
+                             "clients": sorted(gone)})
+        return gone
+
+    def delivery(self, rnd: int, cid: int) -> str:
+        """Fate of one client's finished update: ok|dropped|duplicated|corrupt."""
+        total = self.drop_prob + self.dup_prob + self.corrupt_prob
+        if total <= 0.0:
+            return "ok"
+        rng = np.random.default_rng((self.seed, int(rnd), int(cid), 103))
+        u = float(rng.random())
+        if u < self.drop_prob:
+            fate = "dropped"
+        elif u < self.drop_prob + self.dup_prob:
+            fate = "duplicated"
+        elif u < total:
+            fate = "corrupt"
+        else:
+            return "ok"
+        self.applied.add(f"update_{fate}")
+        self.log.append({"round": int(rnd), "kind": f"update_{fate}",
+                         "client": int(cid)})
+        return fate
+
+    def corrupt_bytes(self, rnd: int, cid: int,
+                      delta: np.ndarray) -> np.ndarray:
+        """Flip one element so the payload no longer matches its checksum."""
+        rng = np.random.default_rng((self.seed, int(rnd), int(cid), 107))
+        out = np.array(delta, copy=True)
+        out.flat[int(rng.integers(out.size))] += 1.0
+        return out
+
+    def crash_now(self, rnd: int, n_accepted: int) -> bool:
+        """True exactly once: when round ``crash_at[0]`` has accepted
+        ``crash_at[1]`` updates. The coordinator raises after its durable
+        save, like a real process death."""
+        if self.crash_at is None or self._crash_fired:
+            return False
+        r, n = self.crash_at
+        if int(rnd) == int(r) and int(n_accepted) >= int(n):
+            self._crash_fired = True
+            self.applied.add("coordinator_crash")
+            self.log.append({"round": int(rnd), "kind": "coordinator_crash",
+                             "after_accepts": int(n_accepted)})
+            return True
+        return False
+
+    # -- reporting ------------------------------------------------------------
+    def to_json(self) -> Dict[str, Any]:
+        return {"seed": self.seed,
+                "probs": {"churn": self.churn_prob, "drop": self.drop_prob,
+                          "dup": self.dup_prob, "corrupt": self.corrupt_prob},
+                "churn_rounds": {str(k): v
+                                 for k, v in self.churn_rounds.items()},
+                "crash_at": list(self.crash_at) if self.crash_at else None,
+                "applied": sorted(self.applied),
+                "log": self.log}

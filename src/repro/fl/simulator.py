@@ -49,6 +49,7 @@ class RoundLog:
     participated: int
     round_s: float
     energy_j: float
+    shortfall: int = 0  # accepted-vs-target gap when the deadline binds
 
 
 @dataclasses.dataclass
@@ -114,7 +115,8 @@ def run_fl(cfg: FLConfig) -> FLResult:
             lats.append(rep.latency_s)
             energies.append(rep.energy_j)
             reports.append((cid, rep))
-        accepted = straggler.accept(lats, k)
+        outcome = straggler.accept(lats, k, deadline_s=cfg.round_deadline_s)
+        accepted = outcome.indices
         round_s = min(max((lats[i] for i in accepted), default=0.0), cfg.round_deadline_s)
         useful = len(accepted)
         if oort is not None:
@@ -127,7 +129,8 @@ def run_fl(cfg: FLConfig) -> FLResult:
         t_min += round_s / 60.0 + 0.5  # +30s aggregation/communication
         logs.append(RoundLog(t_min=t_min, accuracy=acc, online=len(online),
                              participated=useful, round_s=round_s,
-                             energy_j=float(np.sum(energies))))
+                             energy_j=float(np.sum(energies)),
+                             shortfall=outcome.shortfall))
     return FLResult(logs)
 
 

@@ -141,13 +141,27 @@ def resample_trace(ts: np.ndarray, level: np.ndarray) -> BatteryTrace:
 
 
 def make_client_traces(n_base: int = 100, *, seed: int = 0, days: int = 29,
-                       tz_shifts: int = 24) -> List[BatteryTrace]:
-    """100 quality-filtered traces x 24 timezone shifts = 2400 clients (§A.2)."""
+                       tz_shifts: int = 24,
+                       max_attempts_per_trace: int = 50) -> List[BatteryTrace]:
+    """100 quality-filtered traces x 24 timezone shifts = 2400 clients (§A.2).
+
+    The span filter is binding: ``days_min`` is passed explicitly (a previous
+    version passed ``lv.size and 28.0`` positionally, which evaluates to ``0``
+    for an empty trace and silently disabled the filter). A configuration
+    whose raw traces cannot satisfy the filters (e.g. ``days < 28``) raises
+    after a bounded number of attempts instead of looping forever."""
     rng = np.random.default_rng(seed)
     base: List[BatteryTrace] = []
+    attempts = 0
     while len(base) < n_base:
+        if attempts >= max_attempts_per_trace * n_base:
+            raise ValueError(
+                f"quality filters rejected every candidate trace "
+                f"({attempts} attempts for {n_base} traces; days={days} "
+                f"cannot satisfy days_min=28)")
+        attempts += 1
         ts, lv = generate_raw_trace(rng, days=days)
-        if passes_quality_filters(ts, lv.size and 28.0):
+        if passes_quality_filters(ts, days_min=28.0):
             base.append(resample_trace(ts, lv))
     out: List[BatteryTrace] = []
     for shift in range(tz_shifts):

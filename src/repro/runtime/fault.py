@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Sequence
+from typing import Iterator, Optional, Sequence
 
 import numpy as np
 
@@ -46,6 +46,31 @@ class FaultModel:
 
 
 @dataclasses.dataclass(frozen=True)
+class AcceptOutcome:
+    """Result of a round's acceptance decision.
+
+    ``indices`` are the accepted participants, fastest first. ``shortfall``
+    is how far the round fell short of its target (accepted vs min(k,
+    invited)) — callers must see a short round rather than having laggards
+    silently accepted for them.
+    """
+    indices: np.ndarray
+    invited: int
+    target: int
+    deadline_s: float
+
+    @property
+    def shortfall(self) -> int:
+        return max(0, min(self.target, self.invited) - int(self.indices.size))
+
+    def __len__(self) -> int:
+        return int(self.indices.size)
+
+    def __iter__(self) -> Iterator[int]:
+        return iter(int(i) for i in self.indices)
+
+
+@dataclasses.dataclass(frozen=True)
 class StragglerPolicy:
     over_provision: float = 1.3
     deadline_factor: float = 2.0
@@ -53,17 +78,27 @@ class StragglerPolicy:
     def n_to_invite(self, k: int) -> int:
         return max(k, math.ceil(k * self.over_provision))
 
-    def accept(self, latencies: Sequence[float], k: int) -> np.ndarray:
-        """Indices of the first-k finishers within the deadline. An empty
-        round (every invited node died) accepts nobody rather than warning
-        about the median of nothing."""
+    def accept(self, latencies: Sequence[float], k: int, *,
+               deadline_s: Optional[float] = None) -> AcceptOutcome:
+        """First-k finishers within the deadline — and the deadline is
+        binding. A round where fewer than k nodes beat it completes short
+        (graceful degradation); the shortfall is surfaced on the outcome, it
+        is never papered over by accepting laggards. The effective deadline
+        is ``deadline_factor * median_latency``, clamped by the absolute
+        ``deadline_s`` when given. An empty round (every invited node died)
+        accepts nobody rather than warning about the median of nothing."""
         lat = np.asarray(latencies, dtype=np.float64)
         if lat.size == 0 or k <= 0:
-            return np.zeros(0, dtype=np.int64)
-        order = np.argsort(lat)
+            bound = float(deadline_s) if deadline_s is not None else 0.0
+            return AcceptOutcome(indices=np.zeros(0, dtype=np.int64),
+                                 invited=int(lat.size), target=max(0, k),
+                                 deadline_s=bound)
+        order = np.argsort(lat, kind="stable")
         med = float(np.median(lat))
         deadline = med * self.deadline_factor
-        accepted = [i for i in order if lat[i] <= deadline][:k]
-        if len(accepted) < min(k, len(lat)):  # fallback: take fastest k anyway
-            accepted = list(order[:k])
-        return np.asarray(accepted, dtype=np.int64)
+        if deadline_s is not None:
+            deadline = min(deadline, float(deadline_s))
+        accepted = [int(i) for i in order if lat[i] <= deadline][:k]
+        return AcceptOutcome(indices=np.asarray(accepted, dtype=np.int64),
+                             invited=int(lat.size), target=int(k),
+                             deadline_s=deadline)

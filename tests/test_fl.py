@@ -51,3 +51,39 @@ def test_fl_sim_determinism():
     a = run_fl(cfg)
     b = run_fl(cfg)
     assert [r.accuracy for r in a.rounds] == [r.accuracy for r in b.rounds]
+
+
+def test_make_client_traces_rejects_impossible_days_min():
+    # regression: days=5 raw traces can never span the 28-day filter; the
+    # old code passed `lv.size and 28.0` positionally as days_min, silently
+    # relaxing the filter instead of failing
+    with pytest.raises(ValueError, match="days_min"):
+        make_client_traces(1, seed=0, days=5, tz_shifts=1,
+                           max_attempts_per_trace=3)
+
+
+def test_pchip_monotone_and_shape_preserving():
+    from repro.fl.traces import pchip_interpolate
+    rng = np.random.default_rng(5)
+    x = np.cumsum(rng.uniform(0.5, 3.0, 40))
+    y = np.cumsum(rng.uniform(0.0, 1.0, 40))  # non-decreasing data
+    xq = np.linspace(x[0], x[-1] - 1e-9, 500)
+    yq = pchip_interpolate(x, y, xq)
+    assert np.all(np.diff(yq) >= -1e-9)  # monotone data -> monotone interp
+    assert yq.min() >= y.min() - 1e-9 and yq.max() <= y.max() + 1e-9
+    # interpolation, not approximation: knots are reproduced
+    np.testing.assert_allclose(pchip_interpolate(x, y, x[1:-1]), y[1:-1],
+                               atol=1e-9)
+
+
+def test_quality_filter_rejections():
+    day = 1440.0
+    dense = np.arange(0.0, 29 * day, 10.0)
+    assert passes_quality_filters(dense)
+    assert not passes_quality_filters(np.arange(0.0, 10 * day, 10.0))  # short
+    sparse = np.arange(0.0, 29 * day, 20.0 * 60.0)  # 72/day < 100/day
+    assert not passes_quality_filters(sparse)
+    gapped = np.concatenate([dense[dense < 5 * day],
+                             dense[dense > 5 * day + 25 * 60.0]])  # 25h gap
+    assert not passes_quality_filters(gapped)
+    assert not passes_quality_filters(np.array([0.0]))  # degenerate

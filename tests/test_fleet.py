@@ -1,0 +1,212 @@
+"""Fleet runtime: FLTrainJob device sims + crash-consistent coordination."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.engine.chaos import FLEET_KINDS, FleetChaos
+from repro.engine.jobs import ForegroundAppJob
+from repro.engine.runtime import SwanRuntime
+from repro.fl.traces import make_client_traces
+from repro.fleet import (CoordinatorCrash, FleetConfig, FleetCoordinator,
+                         FLTrainJob, FleetClient, build_fleet_clients,
+                         run_client_round)
+
+
+@pytest.fixture(scope="module")
+def traces():
+    return make_client_traces(2, seed=3, tz_shifts=24)  # 48 clients
+
+
+def _cfg(**kw):
+    base = dict(n_clients=48, clients_per_round=5, rounds=3, local_steps=8,
+                dim=16, seed=3, fg_prob=0.0)
+    base.update(kw)
+    return FleetConfig(**base)
+
+
+def _client(traces, cid=0, device="s10e", policy="swan"):
+    return FleetClient(cid, device, traces[cid], "shufflenet-v2",
+                       policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# the device half: FLTrainJob under SwanRuntime
+# ---------------------------------------------------------------------------
+
+
+def test_pause_exact_resume_bitwise(traces, tmp_path):
+    """A foreground burst pauses the job (checkpoint + release); the resumed
+    job's finished update is bitwise identical to an uninterrupted run."""
+    def run_round(with_fg, sub):
+        client = _client(traces)
+        job = FLTrainJob(client, rnd=0, local_steps=8, dim=16, seed=3,
+                         ckpt_dir=str(tmp_path / sub))
+        jobs = [job]
+        if with_fg:
+            jobs.append(ForegroundAppJob([(2, 5)], latency_s=0.5, power=1.2))
+        SwanRuntime(jobs).run(24)
+        assert job.done
+        return job
+
+    plain = run_round(False, "plain")
+    paused = run_round(True, "paused")
+    assert plain.pauses == 0 and paused.pauses >= 1
+    d0, crc0 = plain.update_payload()
+    d1, crc1 = paused.update_payload()
+    np.testing.assert_array_equal(d0, d1)
+    assert crc0 == crc1
+
+
+def test_client_round_deterministic(traces, tmp_path):
+    cfg = _cfg(fg_prob=0.3)
+    outs = [run_client_round(_client(traces, cid=7, device="pixel3"), 0,
+                             300.0, cfg, ckpt_root=str(tmp_path / f"r{i}"))
+            for i in range(2)]
+    assert outs[0].status == outs[1].status
+    assert outs[0].latency_s == outs[1].latency_s
+    if outs[0].status == "ok":
+        np.testing.assert_array_equal(outs[0].delta, outs[1].delta)
+        assert outs[0].checksum == outs[1].checksum
+
+
+def test_baseline_client_has_single_rung(traces, tmp_path):
+    client = _client(traces, policy="baseline")
+    assert len(client.rungs) == 1
+    job = FLTrainJob(client, rnd=0, local_steps=4, dim=8, seed=0,
+                     ckpt_dir=str(tmp_path / "b"))
+    assert not job.adaptive
+
+
+# ---------------------------------------------------------------------------
+# the coordinator half: acceptance, dedup, checksum, stale window
+# ---------------------------------------------------------------------------
+
+
+def _arrival(cid, arrival_s, dim=16, n=10, corrupt=False):
+    import zlib
+    rng = np.random.default_rng((99, cid))
+    delta = rng.standard_normal(dim).astype(np.float32)
+    crc = zlib.crc32(delta.tobytes())
+    if corrupt:
+        delta = delta.copy()
+        delta[0] += 1.0  # checksum now stale
+    return {"cid": cid, "arrival_s": float(arrival_s), "delta": delta,
+            "n_samples": n, "checksum": crc, "device": "s10e", "charging": 0}
+
+
+def _hand_coordinator(traces, tmp_path, arrivals, k=4, deadline=10.0,
+                      stale=2.5):
+    cfg = _cfg()
+    clients = build_fleet_clients(cfg, traces=traces)
+    co = FleetCoordinator(clients, cfg, state_dir=str(tmp_path))
+    counters = {c: 0 for c in ("churned", "offline", "preempted", "straggled",
+                               "dropped", "duplicated", "dup_rejected",
+                               "corrupt_rejected", "late_rejected",
+                               "preemptions")}
+    co.state["inflight"] = {
+        "rnd": 0, "t_start": 0.0, "online": len(clients),
+        "invited": len(arrivals), "k": k, "deadline_s": deadline,
+        "stale_s": stale, "arrivals": arrivals, "next_idx": 0,
+        "accepted_cids": [], "accepted_on_time": 0, "stale_accepted": 0,
+        "last_accept_s": 0.0, "agg": np.zeros(cfg.dim, np.float64),
+        "weight": 0.0, "useful_samples": 0.0, "counters": counters,
+        "by_class": {}, "by_class_energy": {}, "charging_accepted": 0,
+        "retries": 0, "energy_j": 0.0,
+    }
+    co._save()
+    co._finish_round()
+    return co.result().rounds[0]
+
+
+def test_acceptance_dedup_checksum_stale_window(traces, tmp_path):
+    arrivals = [
+        _arrival(1, 2.0),
+        _arrival(1, 3.0),            # duplicate delivery -> dedup reject
+        _arrival(2, 4.0, corrupt=True),  # checksum mismatch -> reject
+        _arrival(3, 11.0),           # past deadline, inside stale window
+        _arrival(4, 13.0),           # past deadline + stale window -> late
+    ]
+    r = _hand_coordinator(traces, tmp_path, arrivals)
+    assert r.accepted == 2 and r.accepted_cids == [1, 3]
+    assert r.accepted_on_time == 1 and r.stale_accepted == 1
+    assert r.dup_rejected == 1
+    assert r.corrupt_rejected == 1
+    assert r.late_rejected == 1
+    assert r.shortfall == 2  # k=4, only 2 accepted
+
+
+def test_acceptance_stops_at_capacity(traces, tmp_path):
+    arrivals = [_arrival(c, 1.0 + c) for c in range(6)]
+    r = _hand_coordinator(traces, tmp_path, arrivals, k=3)
+    assert r.accepted == 3 and r.accepted_cids == [0, 1, 2]
+    assert r.round_s == 3.0  # last accepted arrival, not the full window
+
+
+# ---------------------------------------------------------------------------
+# end to end: crash parity, churn degradation, determinism
+# ---------------------------------------------------------------------------
+
+
+def _run_fleet(traces, tmp_path, sub, chaos=None, crash=False, **kw):
+    cfg = _cfg(**kw)
+    clients = build_fleet_clients(cfg, traces=traces)
+    d = str(tmp_path / sub)
+    co = FleetCoordinator(clients, cfg, state_dir=d, chaos=chaos)
+    if not crash:
+        return co.run()
+    with pytest.raises(CoordinatorCrash):
+        co.run()
+    return FleetCoordinator.resume(clients, cfg, state_dir=d,
+                                   chaos=chaos).run()
+
+
+def test_crash_resume_bitwise_parity(traces, tmp_path):
+    probs = dict(churn_prob=0.1, drop_prob=0.05, dup_prob=0.05,
+                 corrupt_prob=0.05)
+    clean = _run_fleet(traces, tmp_path, "clean", FleetChaos(seed=5, **probs))
+    crashed = _run_fleet(traces, tmp_path, "crash",
+                         FleetChaos(seed=5, crash_at=(1, 2), **probs),
+                         crash=True)
+    assert [r.agg_crc for r in clean.rounds] == \
+        [r.agg_crc for r in crashed.rounds]
+    assert [r.accepted_cids for r in clean.rounds] == \
+        [r.accepted_cids for r in crashed.rounds]
+
+
+def test_heavy_churn_round_degrades_gracefully(traces, tmp_path):
+    ch = FleetChaos(seed=1, churn_rounds={1: 0.5})
+    res = _run_fleet(traces, tmp_path, "churn", ch)
+    r = res.rounds[1]
+    assert r.churned > 0
+    assert r.accepted > 0  # retry wave + over-provisioning keep the round alive
+    assert r.round_s <= r.deadline_s * 1.25 + 1e-9
+    assert "client_churn" in ch.applied
+
+
+def test_fleet_determinism(traces, tmp_path):
+    logs = []
+    for i in range(2):
+        res = _run_fleet(traces, tmp_path, f"det{i}",
+                         FleetChaos(seed=2, churn_prob=0.1, drop_prob=0.05))
+        logs.append([dataclasses.asdict(r) for r in res.rounds])
+    assert logs[0] == logs[1]
+
+
+def test_swan_beats_baseline_goodput(traces, tmp_path):
+    swan = _run_fleet(traces, tmp_path, "sw", FleetChaos(seed=4,
+                                                         drop_prob=0.05))
+    base = _run_fleet(traces, tmp_path, "bl",
+                      FleetChaos(seed=4, drop_prob=0.05), policy="baseline")
+    assert swan.goodput_samples_per_h >= base.goodput_samples_per_h
+    assert swan.total_energy_j < base.total_energy_j
+
+
+def test_fleet_chaos_delivery_is_seeded():
+    a = FleetChaos(seed=9, drop_prob=0.3, dup_prob=0.3, corrupt_prob=0.3)
+    b = FleetChaos(seed=9, drop_prob=0.3, dup_prob=0.3, corrupt_prob=0.3)
+    fates = [a.delivery(0, cid) for cid in range(40)]
+    assert fates == [b.delivery(0, cid) for cid in range(40)]
+    assert set(fates) >= {"ok", "dropped"}
+    for kind in a.applied:
+        assert kind in FLEET_KINDS

@@ -137,3 +137,56 @@ def test_block_pool_interleavings_tiny_pool(seed):
     """Same machine under heavy pressure (4 usable blocks): allocation
     failures must be atomic and the cached tier must still balance."""
     _drive_pool_machine(seed, steps=80, num_blocks=5, block_size=2)
+
+
+# ---------------------------------------------------------------------------
+# trace pipeline: PCHIP interpolation + paper §A.2 quality filters
+# ---------------------------------------------------------------------------
+
+knots_strategy = st.lists(
+    st.tuples(st.floats(0.1, 5.0), st.floats(0.0, 1.0)),
+    min_size=3, max_size=30,
+).map(lambda items: (
+    np.cumsum(np.array([dx for dx, _ in items])),
+    np.array([y for _, y in items])))
+
+
+@given(knots_strategy)
+@settings(max_examples=100, deadline=None)
+def test_pchip_never_overshoots(knots):
+    # shape preservation: PCHIP cannot overshoot the data envelope, for ANY
+    # knot placement (this is what keeps interpolated battery levels in [0,1])
+    x, y = knots
+    xq = np.linspace(x[0], x[-1] - 1e-9, 300)
+    yq = pchip_interpolate(x, y, xq)
+    assert yq.min() >= y.min() - 1e-7
+    assert yq.max() <= y.max() + 1e-7
+
+
+@given(knots_strategy)
+@settings(max_examples=100, deadline=None)
+def test_pchip_preserves_monotonicity(knots):
+    x, y = knots
+    y = np.sort(y)  # force non-decreasing data
+    xq = np.linspace(x[0], x[-1] - 1e-9, 300)
+    yq = pchip_interpolate(x, y, xq)
+    assert np.all(np.diff(yq) >= -1e-7)
+
+
+@given(st.floats(0.5, 27.0), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_quality_filter_rejects_short_spans(span_days, seed):
+    from repro.fl.traces import passes_quality_filters
+    rng = np.random.default_rng(seed)
+    n = max(2, int(span_days * 150))  # densely sampled, still too short
+    ts = np.sort(rng.uniform(0.0, span_days * 1440.0, n))
+    assert not passes_quality_filters(ts)
+
+
+@given(st.integers(1, 2), st.integers(1, 24), st.integers(0, 2 ** 16))
+@settings(max_examples=10, deadline=None)
+def test_timezone_augmentation_multiplies_exactly(n_base, tz_shifts, seed):
+    from repro.fl.traces import make_client_traces
+    traces = make_client_traces(n_base, seed=seed, tz_shifts=tz_shifts)
+    assert len(traces) == n_base * tz_shifts
+    assert len({t.start_offset_min for t in traces}) == tz_shifts

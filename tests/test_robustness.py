@@ -355,8 +355,9 @@ def test_fault_model_seeded_determinism():
 def test_straggler_accept_empty_round():
     pol = StragglerPolicy()
     out = pol.accept([], 4)
-    assert out.shape == (0,) and out.dtype == np.int64
-    assert pol.accept([1.0, 2.0], 0).shape == (0,)
+    assert out.indices.shape == (0,) and out.indices.dtype == np.int64
+    assert len(out) == 0 and out.shortfall == 0
+    assert pol.accept([1.0, 2.0], 0).indices.shape == (0,)
 
 
 def test_straggler_deadline_drops_laggard():
@@ -365,12 +366,21 @@ def test_straggler_deadline_drops_laggard():
     assert len(out) == 3 and 2 not in out
 
 
-def test_straggler_fallback_takes_fastest_k():
-    # fewer than k finish inside the deadline: fall back to the fastest k
-    # rather than stalling the round
+def test_straggler_deadline_is_binding():
+    # fewer than k finish inside the deadline: the deadline is binding — the
+    # laggard is NOT silently accepted, and the shortfall is surfaced
     pol = StragglerPolicy(deadline_factor=1.5)
     out = pol.accept([1.0, 1.0, 50.0], 3)
-    assert set(out.tolist()) == {0, 1, 2}
+    assert set(out.indices.tolist()) == {0, 1}
+    assert out.shortfall == 1
+
+
+def test_straggler_explicit_deadline_clamps():
+    # an explicit wall-clock deadline can only tighten the derived one
+    pol = StragglerPolicy(deadline_factor=10.0)
+    out = pol.accept([1.0, 2.0, 3.0], 3, deadline_s=1.5)
+    assert set(out.indices.tolist()) == {0}
+    assert out.shortfall == 2 and out.deadline_s == 1.5
 
 
 # ---------------------------------------------------------------------------
