@@ -171,7 +171,11 @@ def _contiguous(steps):
     return all(b - a == 1 for a, b in zip(steps, steps[1:]))
 
 
-def inner(ticks: int, out_path: str) -> None:
+def inner(ticks: int, out_path: str, trace_path: str = "") -> None:
+    # telemetry on for the whole chaos run: the exported Chrome trace is the
+    # CI artifact that shows ticks/steps/decodes interleaving under faults
+    from repro import obs
+    tel = obs.enable() if trace_path else None
     scenarios = [
         _scenario("faultfree", ticks, policy="serialize", with_chaos=False),
         _scenario("chaos_serialize", ticks, policy="serialize",
@@ -216,6 +220,9 @@ def inner(ticks: int, out_path: str) -> None:
         att["chaos_shed"] >= att["chaos_serialize"])
     g["pressure_exercised"] = \
         payload["scenarios"]["chaos_shed"]["shed"] > 0
+    if tel is not None:
+        payload["trace_spans"] = len(tel.tracer.spans())
+        tel.tracer.save_chrome_trace(trace_path)
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=1)
 
@@ -225,7 +232,8 @@ def inner(ticks: int, out_path: str) -> None:
 # ---------------------------------------------------------------------------
 
 
-def run(fast: bool = True, json_path: str = "BENCH_slo.json"):
+def run(fast: bool = True, json_path: str = "BENCH_slo.json",
+        trace_path: str = "BENCH_chaos_trace.json"):
     if SRC not in sys.path:  # direct `python benchmarks/chaos_bench.py` runs
         sys.path.insert(0, SRC)
     ticks = 48 if fast else 96
@@ -236,7 +244,8 @@ def run(fast: bool = True, json_path: str = "BENCH_slo.json"):
     t0 = time.perf_counter()
     proc = subprocess.run(
         [sys.executable, os.path.abspath(__file__), "--inner",
-         "--ticks", str(ticks), "--out", json_path],
+         "--ticks", str(ticks), "--out", json_path,
+         "--trace-out", trace_path],
         env=env, capture_output=True, text=True, timeout=1800)
     us = (time.perf_counter() - t0) * 1e6
     assert proc.returncode == 0, \
@@ -267,6 +276,12 @@ def run(fast: bool = True, json_path: str = "BENCH_slo.json"):
                      f"preemptions={sc['preemptions']}"))
     rows.append(("chaos/faults_applied", us,
                  "+".join(g["all_fault_kinds_applied"])))
+    if trace_path and os.path.exists(trace_path):
+        with open(trace_path) as f:
+            trace = json.load(f)
+        n_x = sum(1 for e in trace["traceEvents"] if e.get("ph") == "X")
+        assert n_x > 0, "chaos run recorded no spans in the Chrome trace"
+        rows.append(("chaos/trace_spans", us, str(n_x)))
     return rows
 
 
@@ -277,9 +292,13 @@ if __name__ == "__main__":
     ap.add_argument("--ticks", type=int, default=48)
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--out", default="BENCH_slo.json")
+    ap.add_argument("--trace-out", default="BENCH_chaos_trace.json",
+                    help="Chrome-trace artifact from the instrumented chaos "
+                         "run ('' disables)")
     args = ap.parse_args()
     if args.inner:
-        inner(args.ticks, args.out)
+        inner(args.ticks, args.out, args.trace_out)
     else:
-        for name, us, derived in run(fast=not args.full, json_path=args.out):
+        for name, us, derived in run(fast=not args.full, json_path=args.out,
+                                     trace_path=args.trace_out):
             print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,135 @@
+"""Telemetry overhead smoke: decode tokens/sec, telemetry on vs off.
+
+The repro.obs design promise is that instrumentation is cheap enough to
+leave in the hot loops: disabled it is one attribute lookup + shared no-op
+handle, enabled it is a perf_counter pair and a list append per span. This
+bench holds the promise to a number CI can gate.
+
+One tiny dense engine (paged layout, so the decode path crosses the
+block-table accounting the spans wrap) is compiled once and warmed, then
+identical request waves are decoded with telemetry alternately disabled
+and enabled — interleaved repetitions, best-of per mode, so machine noise
+hits both modes equally. Gate: enabled throughput >= 97% of disabled
+(<= 3% tokens/sec overhead). Writes ``BENCH_obs.json``.
+
+Usage:
+  PYTHONPATH=src python benchmarks/obs_bench.py [--full] [--out BENCH_obs.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+SEED = 11
+N_REQUESTS = 8
+PROMPT_LEN = 8
+GEN_TOKENS = 16
+MAX_OVERHEAD = 0.03  # enabled may cost at most 3% tokens/sec
+
+
+def _engine():
+    import jax
+    from repro.configs.base import ModelConfig
+    from repro.launch.serve import ContinuousBatchingEngine
+    from repro.models.registry import build_model
+
+    cfg = ModelConfig(name="obs-tiny", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                      tie_embeddings=True, source="benchmarks/obs_bench.py")
+    model = build_model(cfg, impl="naive")
+    params = model.init(jax.random.PRNGKey(0))
+    return ContinuousBatchingEngine(model, params, max_batch=4, max_seq=64,
+                                    kv_layout="paged", block_size=4,
+                                    prefix_cache=False)
+
+
+def _wave(rng, uid0):
+    from repro.launch.serve import Request
+    import numpy as np
+    return [Request(uid=uid0 + i,
+                    prompt=rng.integers(0, 64, PROMPT_LEN).astype(np.int32),
+                    max_new_tokens=GEN_TOKENS) for i in range(N_REQUESTS)]
+
+
+def run(fast: bool = True, json_path: str = "BENCH_obs.json"):
+    import numpy as np
+    from repro import obs
+
+    reps = 5 if fast else 9
+    engine = _engine()
+    rng = np.random.default_rng(SEED)
+
+    prev = obs.set_telemetry(obs.Telemetry(enabled=False))
+    try:
+        engine.run(_wave(rng, 0))  # compile + warm every jitted path
+
+        uid = 1000
+        samples = {"off": [], "on": []}
+        span_count = 0
+        for _ in range(reps):
+            for mode in ("off", "on"):  # interleaved: noise hits both modes
+                tel = obs.Telemetry(enabled=(mode == "on"))
+                obs.set_telemetry(tel)
+                reqs = _wave(rng, uid)
+                uid += N_REQUESTS
+                t0 = time.perf_counter()
+                engine.run(reqs)
+                dt = time.perf_counter() - t0
+                samples[mode].append(N_REQUESTS * GEN_TOKENS / dt)
+                if mode == "on":
+                    span_count = len(tel.tracer.spans())
+    finally:
+        obs.set_telemetry(prev)
+
+    best_off = max(samples["off"])
+    best_on = max(samples["on"])
+    ratio = best_on / best_off
+    gate = ratio >= 1.0 - MAX_OVERHEAD
+    payload = {
+        "mode": "fast" if fast else "full",
+        "reps": reps,
+        "tokens_per_run": N_REQUESTS * GEN_TOKENS,
+        "tok_s_off": samples["off"],
+        "tok_s_on": samples["on"],
+        "best_tok_s_off": best_off,
+        "best_tok_s_on": best_on,
+        "overhead_ratio": ratio,
+        "spans_per_run": span_count,
+        "max_overhead": MAX_OVERHEAD,
+        "gate_overhead_ok": gate,
+    }
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=1)
+
+    assert span_count > 0, "enabled runs recorded no spans — bench is blind"
+    assert gate, (
+        f"telemetry overhead gate: enabled decode reached {ratio:.3f}x of "
+        f"disabled tokens/sec (floor {1.0 - MAX_OVERHEAD:.2f}); "
+        f"off={best_off:.0f} on={best_on:.0f}")
+
+    return [
+        ("obs/decode_tok_s_off", 1e6 / best_off, f"{best_off:.0f}"),
+        ("obs/decode_tok_s_on", 1e6 / best_on, f"{best_on:.0f}"),
+        ("obs/overhead_ratio", 0.0,
+         f"{ratio:.4f};gate>={1.0 - MAX_OVERHEAD:.2f};spans={span_count}"),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default="BENCH_obs.json")
+    args = ap.parse_args()
+    for name, us, derived in run(fast=not args.full, json_path=args.out):
+        print(f"{name},{us:.1f},{derived}")
+    print(f"# wrote {args.out}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

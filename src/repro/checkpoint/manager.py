@@ -22,6 +22,7 @@ from typing import Any, List, Optional
 
 import jax
 
+from repro import obs
 from repro.checkpoint.store import CheckpointCorrupt, load_pytree, save_pytree
 
 _PAT = re.compile(r"^step_(\d+)\.ckpt$")
@@ -45,29 +46,34 @@ class CheckpointManager:
         return sorted(out)
 
     def save(self, step: int, state: Any) -> str:
-        # pull to host (works for sharded arrays: addressable data gathered)
-        host_state = jax.tree_util.tree_map(
-            lambda a: jax.device_get(a) if hasattr(a, "dtype") else a, state)
-        path = self._path(step)
-        save_pytree({"step": step, "state": host_state}, path)
-        # retention: keep >= 1 whatever the configuration says — pruning the
-        # checkpoint that was just written would turn save() into delete()
-        keep = max(int(self.keep), 1)
-        for s in self.steps()[:-keep]:
-            if s == step:
-                continue
-            try:
-                os.unlink(self._path(s))
-            except FileNotFoundError:
-                pass  # a concurrent pruner/restart got there first
-        return path
+        with obs.get_telemetry().span("ckpt.save", step=step):
+            # pull to host (works for sharded arrays: addressable data
+            # gathered)
+            host_state = jax.tree_util.tree_map(
+                lambda a: jax.device_get(a) if hasattr(a, "dtype") else a,
+                state)
+            path = self._path(step)
+            save_pytree({"step": step, "state": host_state}, path)
+            # retention: keep >= 1 whatever the configuration says — pruning
+            # the checkpoint that was just written would turn save() into
+            # delete()
+            keep = max(int(self.keep), 1)
+            for s in self.steps()[:-keep]:
+                if s == step:
+                    continue
+                try:
+                    os.unlink(self._path(s))
+                except FileNotFoundError:
+                    pass  # a concurrent pruner/restart got there first
+            return path
 
     def restore(self, step: int, *, mesh=None, specs: Optional[Any] = None):
-        payload = load_pytree(self._path(step))
-        state = payload["state"]
-        if mesh is not None:
-            state = shard_restore(state, mesh, specs)
-        return payload["step"], state
+        with obs.get_telemetry().span("ckpt.restore", step=step):
+            payload = load_pytree(self._path(step))
+            state = payload["state"]
+            if mesh is not None:
+                state = shard_restore(state, mesh, specs)
+            return payload["step"], state
 
     def restore_latest(self, *, mesh=None, specs: Optional[Any] = None):
         """Restore the newest *readable* checkpoint.

@@ -191,6 +191,11 @@ class SocJob:
         if self.state == RUNNING:
             self.state = DRAINING
 
+    def publish_metrics(self, metrics) -> None:
+        """Export this job's gauges/counters into a ``repro.obs``
+        MetricsRegistry (called once per tick by the runtime while
+        telemetry is enabled). Default: nothing to export."""
+
     def on_pause(self, tick: int) -> None:
         """Checkpoint / release resources before the pause takes effect."""
 
@@ -459,6 +464,40 @@ class ServeJob(SocJob):
         out = {k: st[k] for k in keys if k in st}
         out["pool"] = st["pool"]
         return out
+
+    def publish_metrics(self, metrics) -> None:
+        """Serving occupancy/SLO/prefix/swap gauges + block-pool accounting
+        under one registry (ISSUE 9: absorbs ``engine.stats()`` and
+        ``pool.stats()`` into the shared schema)."""
+        st = self.engine.stats()
+        lab = {"job": self.name}
+
+        def g(name: str, help: str = ""):
+            return metrics.gauge(name, help).labels(**lab)
+
+        g("serve_tokens_out", "total generated tokens").set(
+            float(st["tokens_out"]))
+        g("serve_decode_steps").set(float(st["decode_steps"]))
+        g("serve_occupancy", "live slots / slot cap").set(
+            float(st["occupancy"]))
+        g("serve_queue_depth").set(float(len(self.engine.queue)))
+        g("serve_shed_total").set(float(st["shed"]))
+        g("serve_timeouts_total").set(float(st["timeouts"]))
+        g("serve_rejected_total").set(float(st["rejected"]))
+        head = self.slo_headroom()
+        if head is not None:
+            g("serve_slo_headroom").set(float(head))
+        if self._slo_tokens:
+            g("serve_slo_attainment").set(self._slo_attained /
+                                          self._slo_tokens)
+        kv = getattr(self.engine, "kv", None)
+        if kv is not None:
+            for k in ("prefill_chunks", "prefill_chunks_skipped",
+                      "cow_copies", "table_rows_shipped", "swapped",
+                      "swap_outs", "swap_ins"):
+                if k in st:
+                    g(f"serve_{k}").set(float(st[k]))
+            kv.publish_metrics(metrics, stats=st["pool"], **lab)
 
     def observe(self, tick: int, report: StepReport,
                 slowdown: float) -> Optional[str]:

@@ -51,8 +51,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+from repro import obs as _obs
 from repro.engine.jobs import SocJob
 from repro.engine.timeline import Timeline
+from repro.obs.schema import versioned
 
 
 @dataclasses.dataclass
@@ -65,11 +67,20 @@ class RuntimeResult:
     preemptions: int = 0  # foreground pauses committed by the runtime
 
     def summary(self) -> dict:
-        return {"ticks": self.ticks,
-                "virtual_time_s": round(self.virtual_time_s, 6),
-                "work": {k: round(v, 4) for k, v in self.work.items()},
-                "preemptions": self.preemptions,
-                "timeline": self.timeline.summary()}
+        return versioned({
+            "ticks": self.ticks,
+            "virtual_time_s": round(self.virtual_time_s, 6),
+            "work": {k: round(v, 4) for k, v in self.work.items()},
+            "preemptions": self.preemptions,
+            "timeline": self.timeline.summary()})
+
+    def to_json(self) -> dict:
+        """Full machine-readable result: the summary plus the merged
+        timeline's step/migration records, all through the shared
+        ``repro.obs`` encoder (one ``schema_version`` to evolve)."""
+        out = self.summary()
+        out["timeline"] = self.timeline.to_json()
+        return out
 
 
 class SwanRuntime:
@@ -78,7 +89,7 @@ class SwanRuntime:
                  energy=None, battery_level: float = 1.0,
                  energy_unit_j: float = 1.0,
                  charging=None, day_ticks: Optional[int] = None,
-                 chaos=None, verbose: bool = False):
+                 chaos=None, verbose: bool = False, telemetry=None):
         if not jobs:
             raise ValueError("need at least one job")
         names = [j.name for j in jobs]
@@ -100,6 +111,78 @@ class SwanRuntime:
         self.ticks = 0
         self.preemptions = 0
         self._preempted: Set[str] = set()  # jobs paused BY the runtime
+        # None -> follow the process-global telemetry (repro.obs), so a CLI
+        # enabling it before run() is picked up without plumbing
+        self._telemetry = telemetry
+
+    @property
+    def obs(self):
+        # getattr: arbitration unit tests build bare instances via __new__
+        tel = getattr(self, "_telemetry", None)
+        return tel if tel is not None else _obs.get_telemetry()
+
+    # -- telemetry -----------------------------------------------------------
+    @staticmethod
+    def _rung_name(job: SocJob) -> str:
+        """Audit-only rung label; tolerant of minimal SocJob test doubles
+        that skip the ladder surface."""
+        rung = getattr(job, "active_rung", None)
+        return getattr(rung, "name", "")
+
+    def _soc_state(self) -> Dict:
+        """Energy-loan + thermal context snapshot for audit records."""
+        out: Dict = {}
+        if self.energy is not None:
+            out["energy"] = {
+                "loan_j": round(float(self.energy.loan_j), 6),
+                "available": bool(self.energy.available(self.battery_level)),
+                "battery_level": self.battery_level,
+            }
+        tr = self.trace
+        if tr is not None and hasattr(tr, "temp"):
+            out["thermal"] = {"temp": round(float(tr.temp), 6),
+                              "throttled": bool(getattr(tr, "throttled",
+                                                        False))}
+        return out
+
+    def _decision_ctx(self, active: List[SocJob],
+                      proposals: List[Tuple[SocJob, str]]) -> Dict:
+        """Full scoring context at decision time — what the audit stores so
+        "why did the arbiter pick that job" is answerable after the fact."""
+        ctx = {
+            "scores": {j.name: j.relinquish_score() for j in active},
+            "slo_headroom": {j.name: j.slo_headroom() for j in active},
+            "proposals": {j.name: p for j, p in proposals},
+        }
+        ctx.update(self._soc_state())
+        return ctx
+
+    def _publish_metrics(self, tick: int, active: List[SocJob]) -> None:
+        tel = self.obs
+        if not tel.enabled:
+            return
+        m = tel.metrics
+        tr = self.trace
+        if tr is not None and hasattr(tr, "temp"):
+            m.gauge("thermal_temp_c", "shared die temperature").set(
+                float(tr.temp))
+            m.gauge("thermal_throttled", "1 while the die throttles").set(
+                1.0 if getattr(tr, "throttled", False) else 0.0)
+        if self.energy is not None:
+            m.gauge("energy_loan_j", "outstanding borrowed energy").set(
+                float(self.energy.loan_j))
+            m.gauge("energy_available",
+                    "1 while the loan budget allows full draw").set(
+                1.0 if self.energy.available(self.battery_level) else 0.0)
+            m.gauge("battery_level").set(float(self.battery_level))
+        m.gauge("runtime_active_jobs").set(float(len(active)))
+        m.gauge("runtime_preemptions_total").set(float(self.preemptions))
+        for job in active:
+            m.gauge("job_rung_idx", "active ladder position (0 = top)"
+                    ).labels(job=job.name).set(float(job.rung_idx))
+            m.gauge("job_work_total", "cumulative goodput units").labels(
+                job=job.name).set(float(self.work[job.name]))
+            job.publish_metrics(m)
 
     # -- shared event sources ------------------------------------------------
     def _advance_trace(self, tick: int, total_power: float) -> None:
@@ -136,6 +219,7 @@ class SwanRuntime:
                 job.pause(tick)
                 self._preempted.add(job.name)
                 self.preemptions += 1
+                self._audit_event(tick, job, "pause", rule="foreground")
                 if self.verbose:
                     print(f"[swan] tick {tick}: {job.name} paused "
                           f"(foreground)")
@@ -143,8 +227,19 @@ class SwanRuntime:
                     job.name in self._preempted:
                 job.resume(tick)
                 self._preempted.discard(job.name)
+                self._audit_event(tick, job, "resume", rule="foreground")
                 if self.verbose:
                     print(f"[swan] tick {tick}: {job.name} resumed")
+
+    def _audit_event(self, tick: int, job: SocJob, event: str, *,
+                     rule: str = "", detail: str = "") -> None:
+        tel = self.obs
+        if not tel.enabled:
+            return
+        rung = self._rung_name(job)
+        tel.audit.record(tick=tick, job=job.name, event=event, rule=rule,
+                         from_rung=rung, to_rung=rung, detail=detail,
+                         **self._soc_state())
 
     # -- energy --------------------------------------------------------------
     def _account_energy(self, tick: int, total_power: float,
@@ -170,14 +265,17 @@ class SwanRuntime:
         cands = [j for j in active if j.can_downgrade()]
         if cands:
             hungriest = max(cands, key=lambda j: j.power_draw())
-            self._commit(hungriest, "down", "energy", tick)
+            self._commit(hungriest, "down", "energy", tick,
+                         ctx=self._decision_ctx(active, [])
+                         if self.obs.enabled else None)
         return True, bool(cands)
 
     # -- arbitration ---------------------------------------------------------
     def _arbitrate(self, tick: int, active: List[SocJob],
                    proposals: List[Tuple[SocJob, str]],
                    allow_upgrades: bool = True,
-                   allow_downgrades: bool = True) -> None:
+                   allow_downgrades: bool = True,
+                   ctx: Optional[Dict] = None) -> None:
         violators = [j for j in active
                      if (h := j.slo_headroom()) is not None and h < 0.0]
         downs = [j for j, p in proposals if p == "down"]
@@ -201,7 +299,7 @@ class SwanRuntime:
                     reason = "slo"
                 else:
                     reason = "arbitration"
-                self._commit(best, "down", reason, tick)
+                self._commit(best, "down", reason, tick, ctx=ctx)
             return
         if not allow_upgrades:
             return
@@ -213,11 +311,26 @@ class SwanRuntime:
                if (h := j.slo_headroom()) is None or h > 0.0]
         if ups:
             best = max(ups, key=lambda j: j.priority)
-            self._commit(best, "up", "clear", tick)
+            self._commit(best, "up", "clear", tick, ctx=ctx)
 
     def _commit(self, job: SocJob, direction: str, reason: str,
-                tick: int) -> None:
+                tick: int, ctx: Optional[Dict] = None) -> None:
+        tel = self.obs
+        from_rung = self._rung_name(job) if tel.enabled else ""
         rec = job.migrate(direction, reason, tick)
+        if tel.enabled:
+            # "commit": the migration applied; "veto": the arbiter chose this
+            # job but its controller refused (ladder edge / cooldown). Either
+            # way the full scoring context that decided it is preserved.
+            tel.audit.record(
+                tick=tick, job=job.name,
+                event="commit" if rec is not None else "veto",
+                direction=direction, rule=reason, from_rung=from_rung,
+                to_rung=self._rung_name(job),
+                **(ctx if ctx is not None else self._soc_state()))
+            if rec is not None:
+                tel.metrics.counter("runtime_migrations_total").labels(
+                    job=job.name, direction=direction, reason=reason).inc()
         if rec is not None and self.verbose:
             print(f"[swan] tick {tick}: {job.name} {rec.from_rung} -> "
                   f"{rec.to_rung} ({reason})")
@@ -228,54 +341,77 @@ class SwanRuntime:
         done). One tick = one scheduling quantum for every active job."""
         for job in self.jobs:
             job.prepare()
+        tel = self.obs
         for tick in range(start, until):
-            # 0. chaos injection + foreground preemption decide who runs
-            if self.chaos is not None:
-                self.chaos.begin_tick(tick, self)
-            self._preempt(tick)
-            unfinished = [j for j in self.jobs if not j.done]
-            if not unfinished:
-                break
-            active = [j for j in unfinished if not j.paused]
-            for job in active:
-                job.begin_tick(tick)
-            # 1. hard events: device loss on the shared pool
-            if self.fault_events is not None and self.elastic is not None:
-                failed = tuple(self.fault_events(
-                    tick, self.elastic.healthy_ids()))
-                if failed:
-                    self.elastic.mark_failed(failed)
-                    for job in active:
-                        job.on_device_loss(tick, failed)
-            # 2. shared event sources tick once, under the summed draw
-            total_power = sum(j.power_draw() for j in active)
-            self._advance_trace(tick, total_power)
-            # 3. energy budget
-            energy_pressed, energy_walked = self._account_energy(
-                tick, total_power, active)
-            # 4. one quantum per job; collect monitor proposals
-            proposals: List[Tuple[SocJob, str]] = []
-            tick_times: List[float] = []
-            for job in active:
-                report = job.step(tick)
-                prop = job.observe(tick, report,
-                                   self._slowdown_for(tick, job.sensitivity()))
-                self.work[job.name] += report.work
-                tick_times.append(report.observed_s if report.observed_s
-                                  is not None else report.latency_s)
-                if prop is not None:
-                    proposals.append((job, prop))
-            if tick_times:
-                # jobs share the tick; its virtual duration is the slowest
-                self.virtual_time_s += max(tick_times)
-            # 5. arbitrated migration (at most one down, one up per tick —
-            # an energy walk-down counts as the tick's downgrade)
-            self._arbitrate(tick, active, proposals,
-                            allow_upgrades=not energy_pressed,
-                            allow_downgrades=not energy_walked)
-            for job in active:
-                job.end_tick(tick)
-            self.ticks += 1
+            with tel.span("runtime.tick", tick=tick):
+                # 0. chaos injection + foreground preemption decide who runs
+                if self.chaos is not None:
+                    self.chaos.begin_tick(tick, self)
+                self._preempt(tick)
+                unfinished = [j for j in self.jobs if not j.done]
+                if not unfinished:
+                    break
+                active = [j for j in unfinished if not j.paused]
+                for job in active:
+                    job.begin_tick(tick)
+                # 1. hard events: device loss on the shared pool
+                if self.fault_events is not None and self.elastic is not None:
+                    failed = tuple(self.fault_events(
+                        tick, self.elastic.healthy_ids()))
+                    if failed:
+                        self.elastic.mark_failed(failed)
+                        for job in active:
+                            job.on_device_loss(tick, failed)
+                            self._audit_event(
+                                tick, job, "device-loss", rule="device-loss",
+                                detail=f"failed={sorted(failed)}")
+                # 2. shared event sources tick once, under the summed draw
+                total_power = sum(j.power_draw() for j in active)
+                self._advance_trace(tick, total_power)
+                # 3. energy budget
+                energy_pressed, energy_walked = self._account_energy(
+                    tick, total_power, active)
+                # 4. one quantum per job; collect monitor proposals
+                proposals: List[Tuple[SocJob, str]] = []
+                tick_times: List[float] = []
+                for job in active:
+                    report = job.step(tick)
+                    prop = job.observe(
+                        tick, report,
+                        self._slowdown_for(tick, job.sensitivity()))
+                    self.work[job.name] += report.work
+                    tick_times.append(report.observed_s if report.observed_s
+                                      is not None else report.latency_s)
+                    if prop is not None:
+                        proposals.append((job, prop))
+                    if tel.enabled:
+                        tel.metrics.histogram(
+                            "job_step_latency_s",
+                            "wall latency of one scheduling quantum").labels(
+                            job=job.name).observe(report.latency_s)
+                if tick_times:
+                    # jobs share the tick; its virtual duration is the slowest
+                    self.virtual_time_s += max(tick_times)
+                # 5. arbitrated migration (at most one down, one up per tick —
+                # an energy walk-down counts as the tick's downgrade)
+                ctx = self._decision_ctx(active, proposals) \
+                    if tel.enabled else None
+                if tel.enabled:
+                    for j, p in proposals:
+                        rung = self._rung_name(j)
+                        tel.audit.record(tick=tick, job=j.name,
+                                         event="propose", direction=p,
+                                         rule="monitor", from_rung=rung,
+                                         to_rung=rung, **ctx)
+                self._arbitrate(tick, active, proposals,
+                                allow_upgrades=not energy_pressed,
+                                allow_downgrades=not energy_walked,
+                                ctx=ctx)
+                for job in active:
+                    job.end_tick(tick)
+                self._publish_metrics(tick, active)
+                tel.snap(tick)
+                self.ticks += 1
         # a burst running past the horizon must not strand paused jobs:
         # whoever the runtime paused is resumed before the loop closes
         for job in self.jobs:

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint.manager import CheckpointManager, shard_restore
 from repro.compat import set_mesh
 from repro.core.controller import SwanController
@@ -180,21 +181,25 @@ class TrainSession(SocJob):
         optimizer steps — a crash-resume from this checkpoint must not skip
         work. Also drops every cached executable — the device set changed
         under them."""
-        mgr = self._ckpt()
-        mgr.save(completed, state)
-        # restore exactly the checkpoint just written — restore_latest could
-        # pick up a stale higher-step file in a reused checkpoint directory
-        if new_mesh is not None:
-            _, state = mgr.restore(completed, mesh=new_mesh)
-        else:
-            _, state = mgr.restore(completed)
-            state = jax.tree_util.tree_map(
-                lambda a: jnp.asarray(a) if hasattr(a, "dtype") else a, state)
-        for r in self._rungs:
-            r.invalidate()
-        self._mesh = new_mesh
-        self._mesh_key = self._mesh_fingerprint(new_mesh)
-        return state
+        with obs.get_telemetry().span("train.remesh", job=self.name,
+                                      step=completed):
+            mgr = self._ckpt()
+            mgr.save(completed, state)
+            # restore exactly the checkpoint just written — restore_latest
+            # could pick up a stale higher-step file in a reused checkpoint
+            # directory
+            if new_mesh is not None:
+                _, state = mgr.restore(completed, mesh=new_mesh)
+            else:
+                _, state = mgr.restore(completed)
+                state = jax.tree_util.tree_map(
+                    lambda a: jnp.asarray(a) if hasattr(a, "dtype") else a,
+                    state)
+            for r in self._rungs:
+                r.invalidate()
+            self._mesh = new_mesh
+            self._mesh_key = self._mesh_fingerprint(new_mesh)
+            return state
 
     def _apply_migration(self, step: int, state, from_rung: Rung,
                          reason: str, completed: int):
@@ -347,11 +352,15 @@ class TrainSession(SocJob):
         rung = self.rung
         self._ran_tick = tick
         batch = self.batch_fn(step)
-        t0 = time.perf_counter()
-        self._state, metrics = self._run_step(self._state, batch)
-        loss = float(metrics["loss"])  # blocks until the step is done
-        dt = time.perf_counter() - t0
         warmup = self._steps_on_rung == 0
+        # compile=True marks the first quantum on a rung (pays trace+compile)
+        # so the trace distinguishes compile spans from steady-state steps
+        with obs.get_telemetry().span("train.step", job=self.name, step=step,
+                                      rung=rung.name, compile=warmup):
+            t0 = time.perf_counter()
+            self._state, metrics = self._run_step(self._state, batch)
+            loss = float(metrics["loss"])  # blocks until the step is done
+            dt = time.perf_counter() - t0
         self._steps_on_rung += 1
         self._losses.append(loss)
         self._last_dt = dt
@@ -403,6 +412,13 @@ class TrainSession(SocJob):
                 (step + 1) % self.ckpt_every == 0:
             self.ckpt.save(step + 1, self._state)
         self._step_idx = step + 1
+
+    def publish_metrics(self, metrics) -> None:
+        if self._losses:
+            metrics.gauge("train_loss").labels(job=self.name).set(
+                self._losses[-1])
+        metrics.gauge("train_steps_total").labels(job=self.name).set(
+            float(self._step_idx))
 
     def finalize(self) -> None:
         if self.ckpt is not None and self._losses:

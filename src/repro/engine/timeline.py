@@ -11,6 +11,8 @@ import dataclasses
 import json
 from typing import List, Optional
 
+from repro.obs.schema import encode_record, versioned
+
 
 @dataclasses.dataclass
 class MigrationRecord:
@@ -120,9 +122,12 @@ class Timeline:
 
     # -- serialization -----------------------------------------------------
     def to_json(self) -> dict:
-        return {"migrations": [dataclasses.asdict(m) for m in self.migrations],
-                "steps": [dataclasses.asdict(s) for s in self.steps],
-                "summary": self.summary()}
+        # step/migration records go through the shared repro.obs encoder so
+        # the whole telemetry plane evolves in one place (schema_version)
+        return versioned({
+            "migrations": [encode_record(m) for m in self.migrations],
+            "steps": [encode_record(s) for s in self.steps],
+            "summary": self.summary()})
 
     def save(self, path: str) -> str:
         with open(path, "w") as f:

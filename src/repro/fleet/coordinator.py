@@ -30,6 +30,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.fl.selection import OortSelector, random_selection
 from repro.fl.simulator import DEVICE_MIX, TASK_CEILING, TASK_TAU
 from repro.fl.traces import BatteryTrace, make_client_traces
@@ -262,6 +263,10 @@ class FleetCoordinator:
         return self._deadline_s
 
     def _run_round(self, rnd: int) -> None:
+        with obs.get_telemetry().span("fleet.round", rnd=rnd):
+            self._run_round_inner(rnd)
+
+    def _run_round_inner(self, rnd: int) -> None:
         cfg, st = self.cfg, self.state
         t = float(st["t_min"])
         day = int(t // 1440)
@@ -296,8 +301,10 @@ class FleetCoordinator:
                     charging=c.charging(t)))
                 arrival_off.append(0.0)
                 continue
-            outcomes.append(run_client_round(self.clients[cid], rnd, t, cfg,
-                                             ckpt_root=self._ckpt_root))
+            with obs.get_telemetry().span("fleet.invite", rnd=rnd, cid=cid):
+                outcomes.append(run_client_round(self.clients[cid], rnd, t,
+                                                 cfg,
+                                                 ckpt_root=self._ckpt_root))
             arrival_off.append(0.0)
         # bounded retry waves: churn/offline are detectable before the
         # deadline (missing heartbeat); stragglers and foreground preemptions
@@ -320,9 +327,11 @@ class FleetCoordinator:
                 tried.add(cid)
                 retries += 1
                 wave_members.append(len(outcomes))
-                outcomes.append(run_client_round(
-                    self.clients[cid], rnd, t + backoff / 60.0, cfg,
-                    ckpt_root=self._ckpt_root))
+                with obs.get_telemetry().span("fleet.invite", rnd=rnd,
+                                              cid=cid, wave=wave):
+                    outcomes.append(run_client_round(
+                        self.clients[cid], rnd, t + backoff / 60.0, cfg,
+                        ckpt_root=self._ckpt_root))
                 arrival_off.append(backoff)
         # delivery: the network loses, re-sends, and corrupts updates
         counters = {"churned": 0, "offline": 0, "preempted": 0,
@@ -412,23 +421,27 @@ class FleetCoordinator:
                     int(a["checksum"]):
                 counters["corrupt_rejected"] += 1
                 continue
-            n = int(a["n_samples"])
-            infl["agg"] = np.asarray(infl["agg"], np.float64) \
-                + delta.astype(np.float64) * n
-            infl["weight"] = float(infl["weight"]) + n
-            infl["useful_samples"] = float(infl["useful_samples"]) + n * 0.2
-            accepted.add(cid)
-            infl["accepted_cids"] = sorted(accepted)
-            if arrival <= deadline:
-                infl["accepted_on_time"] = int(infl["accepted_on_time"]) + 1
-            else:
-                infl["stale_accepted"] = int(infl["stale_accepted"]) + 1
-            infl["last_accept_s"] = max(float(infl["last_accept_s"]), arrival)
-            dev = a["device"]
-            infl["by_class"][dev] = int(infl["by_class"].get(dev, 0)) + 1
-            infl["charging_accepted"] = \
-                int(infl["charging_accepted"]) + int(a["charging"])
-            self._save()  # accepted set + partial aggregate are one atom
+            with obs.get_telemetry().span("fleet.accept", rnd=rnd, cid=cid):
+                n = int(a["n_samples"])
+                infl["agg"] = np.asarray(infl["agg"], np.float64) \
+                    + delta.astype(np.float64) * n
+                infl["weight"] = float(infl["weight"]) + n
+                infl["useful_samples"] = \
+                    float(infl["useful_samples"]) + n * 0.2
+                accepted.add(cid)
+                infl["accepted_cids"] = sorted(accepted)
+                if arrival <= deadline:
+                    infl["accepted_on_time"] = \
+                        int(infl["accepted_on_time"]) + 1
+                else:
+                    infl["stale_accepted"] = int(infl["stale_accepted"]) + 1
+                infl["last_accept_s"] = max(float(infl["last_accept_s"]),
+                                            arrival)
+                dev = a["device"]
+                infl["by_class"][dev] = int(infl["by_class"].get(dev, 0)) + 1
+                infl["charging_accepted"] = \
+                    int(infl["charging_accepted"]) + int(a["charging"])
+                self._save()  # accepted set + partial aggregate are one atom
             if self.chaos is not None and \
                     self.chaos.crash_now(rnd, len(accepted)):
                 raise CoordinatorCrash(
@@ -498,6 +511,21 @@ class FleetCoordinator:
         st["round"] = rnd + 1
         st["inflight"] = None
         self._save()
+        tel = obs.get_telemetry()
+        if tel.enabled:
+            m = tel.metrics
+            lab = {"policy": cfg.policy}
+            m.gauge("fleet_round", "last finalized round").labels(
+                **lab).set(float(rnd))
+            m.gauge("fleet_round_goodput_samples",
+                    "useful samples this round").labels(**lab).set(
+                rec.useful_samples)
+            m.gauge("fleet_accuracy").labels(**lab).set(rec.accuracy)
+            m.counter("fleet_accepted_total").labels(**lab).inc(n_accepted)
+            m.counter("fleet_invited_total").labels(**lab).inc(rec.invited)
+            m.histogram("fleet_round_s", "wall-clock round length").labels(
+                **lab).observe(rec.round_s)
+            tel.snap(f"fleet-round-{rnd}")
 
     def _record_empty_round(self, rnd: int, t: float,
                             deadline: float) -> None:

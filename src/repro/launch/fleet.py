@@ -26,6 +26,7 @@ import dataclasses
 import json
 import tempfile
 
+from repro import obs
 from repro.engine.chaos import FleetChaos
 from repro.fleet import (CoordinatorCrash, FleetConfig, FleetCoordinator,
                          build_fleet_clients)
@@ -98,10 +99,15 @@ def main(argv=None):
                     help="coordinator durable-state directory (default: "
                          "a temporary directory)")
     ap.add_argument("--json-out", default=None)
+    ap.add_argument("--telemetry-out", default=None,
+                    help="directory for the repro.obs telemetry bundle "
+                         "(metrics.jsonl, spans.jsonl, trace.json, "
+                         "audit.json)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quiet", dest="verbose", action="store_false")
     args = ap.parse_args(argv)
 
+    tel = obs.enable() if args.telemetry_out else None
     cfg = FleetConfig(n_clients=args.clients,
                       clients_per_round=args.per_round, rounds=args.rounds,
                       policy=args.policy, selector=args.selector,
@@ -158,13 +164,18 @@ def main(argv=None):
         print(f"[fleet] chaos: applied {sorted(chaos.applied)}")
 
     if args.json_out:
-        payload = {"config": dataclasses.asdict(cfg), "result": res.to_json()}
+        payload = obs.versioned({"config": dataclasses.asdict(cfg),
+                                 "result": res.to_json()})
         if chaos is not None:
             payload["chaos"] = chaos.to_json()
         with open(args.json_out, "w") as f:
-            json.dump(payload, f, indent=1)
+            json.dump(obs.encode_record(payload), f, indent=1)
         if args.verbose:
             print(f"[fleet] wrote {args.json_out}")
+    if tel is not None:
+        tel.save(args.telemetry_out)
+        print(f"[obs] telemetry bundle -> {args.telemetry_out} "
+              f"({len(tel.tracer.spans())} spans)")
     return res
 
 

@@ -24,6 +24,7 @@ import json
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config
 from repro.core.energy import EnergyLoan
 from repro.engine.chaos import ChaosInjector
@@ -74,6 +75,7 @@ def build_jobs(args):
     params = model.init(jax.random.PRNGKey(0))
     engine = ContinuousBatchingEngine(model, params, max_batch=args.slots,
                                       max_seq=max_seq,
+                                      kv_layout=args.kv_layout,
                                       admission_policy=args.admission_policy)
     rng = np.random.default_rng(args.seed)
     n_req = args.requests or 3 * args.slots
@@ -117,6 +119,11 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=12)
     ap.add_argument("--max-seq", type=int, default=0)
+    ap.add_argument("--kv-layout", default="contig",
+                    choices=("contig", "paged"),
+                    help="serving KV layout; 'paged' exercises the block "
+                         "pool (prefix sharing, COW) and publishes pool_* "
+                         "telemetry metrics")
     ap.add_argument("--slo-p99", type=float, default=0.0,
                     help="p99 per-token latency SLO in seconds (0 = none); "
                          "the arbiter sheds co-tenants while it is violated "
@@ -164,10 +171,18 @@ def main(argv=None):
     ap.add_argument("--timeline-out", default=None,
                     help="write the merged job-tagged timeline JSON here")
     ap.add_argument("--json-out", default=None)
+    ap.add_argument("--telemetry-out", default=None,
+                    help="directory for the repro.obs telemetry bundle: "
+                         "per-tick metrics.jsonl, spans.jsonl, Perfetto "
+                         "trace.json, arbiter audit.json")
     ap.add_argument("--log-every", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quiet", dest="verbose", action="store_false")
     args = ap.parse_args(argv)
+
+    # enable telemetry before any job/engine is constructed so every span
+    # source (engine, checkpoint manager, runtime) sees the live instance
+    tel = obs.enable() if args.telemetry_out else None
 
     if args.interference_trace and args.thermal_trace:
         args.thermal_trace = ""  # explicit bursts replace the thermal model
@@ -223,18 +238,24 @@ def main(argv=None):
         res.timeline.save(args.timeline_out)
         print(f"[swan] merged timeline -> {args.timeline_out}")
     if args.json_out:
-        payload = {"summary": s, "work": res.work,
-                   "virtual_time_s": round(res.virtual_time_s, 6),
-                   "preemptions": res.preemptions,
-                   "per_job": {n: res.timeline.for_job(n).summary()
-                               for n in res.timeline.jobs()}}
+        payload = obs.versioned({
+            "summary": s, "work": res.work,
+            "virtual_time_s": round(res.virtual_time_s, 6),
+            "preemptions": res.preemptions,
+            "per_job": {n: res.timeline.for_job(n).summary()
+                        for n in res.timeline.jobs()}})
         if serve.slo_p99_s is not None:
             payload["slo"] = serve.slo_stats()
         payload["serve_stats"] = serve.engine.stats()
         if chaos is not None:
             payload["chaos"] = chaos.to_json()
         with open(args.json_out, "w") as f:
-            json.dump(payload, f, indent=1)
+            json.dump(obs.encode_record(payload), f, indent=1)
+    if tel is not None:
+        tel.save(args.telemetry_out)
+        print(f"[obs] telemetry bundle -> {args.telemetry_out} "
+              f"({len(tel.tracer.spans())} spans, "
+              f"{len(tel.audit)} audit records)")
     return res
 
 

@@ -78,6 +78,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config
 from repro.kernels.backend import auto_decode_impl
 from repro.launch.steps import (build_decode_step, build_paged_decode_step,
@@ -441,26 +442,32 @@ class ContinuousBatchingEngine:
         bitwise and the resumed stream is token-identical."""
         uid = self.slot_uid[slot]
         blocks = self.kv.slot_blocks(slot)
-        host = jax.tree_util.tree_map(
-            np.asarray,
-            self._gather_blocks(self.cache, jnp.asarray(blocks, jnp.int32)))
-        self.swapped[uid] = SwappedSeq(
-            uid=uid, generated=list(self.generated[slot]),
-            cache_len=int(self.cache_len[slot]),
-            budget=int(self.slot_budget[slot]),
-            next_token=int(self.tokens[slot, 0]), host_kv=host,
-            n_blocks=len(blocks), worst=self._reserved.pop(slot),
-            swapped_at=self.decode_steps)
-        self.slot_uid[slot] = None
-        self.kv.release(slot)
-        self.swap_outs += 1
+        with obs.get_telemetry().span("serve.swap_out", uid=uid,
+                                      blocks=len(blocks)):
+            host = jax.tree_util.tree_map(
+                np.asarray,
+                self._gather_blocks(self.cache,
+                                    jnp.asarray(blocks, jnp.int32)))
+            self.swapped[uid] = SwappedSeq(
+                uid=uid, generated=list(self.generated[slot]),
+                cache_len=int(self.cache_len[slot]),
+                budget=int(self.slot_budget[slot]),
+                next_token=int(self.tokens[slot, 0]), host_kv=host,
+                n_blocks=len(blocks), worst=self._reserved.pop(slot),
+                swapped_at=self.decode_steps)
+            self.slot_uid[slot] = None
+            self.kv.release(slot)
+            self.swap_outs += 1
 
     def _swap_in(self, slot: int, sw: SwappedSeq) -> None:
         """Restore a parked sequence into fresh pool blocks and resume."""
-        blocks = self.kv.admit(slot, sw.uid, sw.n_blocks * self.block_size)
-        self.cache = self._put_blocks(
-            self.cache, jax.tree_util.tree_map(jnp.asarray, sw.host_kv),
-            jnp.asarray(blocks, jnp.int32))
+        with obs.get_telemetry().span("serve.swap_in", uid=sw.uid,
+                                      blocks=sw.n_blocks):
+            blocks = self.kv.admit(slot, sw.uid,
+                                   sw.n_blocks * self.block_size)
+            self.cache = self._put_blocks(
+                self.cache, jax.tree_util.tree_map(jnp.asarray, sw.host_kv),
+                jnp.asarray(blocks, jnp.int32))
         self._reserved[slot] = sw.worst
         self.slot_uid[slot] = sw.uid
         self.slot_budget[slot] = sw.budget
@@ -550,8 +557,11 @@ class ContinuousBatchingEngine:
                 # causal attention keeps every position < P unaffected by the
                 # right-padding; logits must come from the true last token
                 batch["last_pos"] = jnp.int32(P - 1)
-            logits, pcache = self._prefill(self.params, batch)
-            self.cache = self._splice(self.cache, pcache, jnp.int32(slot))
+            with obs.get_telemetry().span("serve.prefill", uid=req.uid,
+                                          prompt_len=P, padded_len=Lp):
+                logits, pcache = self._prefill(self.params, batch)
+                self.cache = self._splice(self.cache, pcache,
+                                          jnp.int32(slot))
         first = self._pick_token(logits[0, -1], req.uid, 0)
         self.slot_uid[slot] = req.uid
         self.slot_budget[slot] = req.max_new_tokens
@@ -586,20 +596,25 @@ class ContinuousBatchingEngine:
         padded = np.pad(np.asarray(req.prompt, np.int32), (0, Lp - P))
         first_miss = n_blocks if covered >= P else covered // bs
         logits = None
+        tel = obs.get_telemetry()
         for c in range(first_miss, n_blocks):
             toks = jnp.asarray(padded[c * bs:(c + 1) * bs])[None]
             last = jnp.int32(min(P - 1 - c * bs, bs - 1))
-            logits, self.cache = self._prefill_chunk(
-                self.params, self.cache, toks, jnp.int32(c * bs), table_row,
-                last)
+            with tel.span("serve.prefill_chunk", uid=req.uid, chunk=c,
+                          of=n_blocks):
+                logits, self.cache = self._prefill_chunk(
+                    self.params, self.cache, toks, jnp.int32(c * bs),
+                    table_row, last)
             self.prefill_chunks += 1
         self.prefill_chunks_skipped += first_miss
         if logits is None:  # every block hit: read-only last-chunk recompute
             c = n_blocks - 1
             toks = jnp.asarray(padded[c * bs:(c + 1) * bs])[None]
-            logits, _ = self._prefill_chunk_ro(
-                self.params, self.cache, toks, jnp.int32(c * bs), table_row,
-                jnp.int32(P - 1 - c * bs))
+            with tel.span("serve.prefill_chunk", uid=req.uid, chunk=c,
+                          of=n_blocks, readonly=True):
+                logits, _ = self._prefill_chunk_ro(
+                    self.params, self.cache, toks, jnp.int32(c * bs),
+                    table_row, jnp.int32(P - 1 - c * bs))
             self.prefill_chunks += 1
         self.kv.index_prompt(slot, req.prompt)
         return logits
@@ -774,8 +789,12 @@ class ContinuousBatchingEngine:
                 if ev is not None and ev.kind == "cow":
                     # first divergent write into a shared block: give this
                     # sequence a private copy, device-side, before decode
-                    self.cache = self._copy_block(
-                        self.cache, jnp.int32(ev.src), jnp.int32(ev.block))
+                    with obs.get_telemetry().span("serve.cow_copy",
+                                                  slot=slot, src=ev.src,
+                                                  dst=ev.block):
+                        self.cache = self._copy_block(
+                            self.cache, jnp.int32(ev.src),
+                            jnp.int32(ev.block))
                     self.cow_copies += 1
             rows = self.kv.take_dirty()
             if rows:
@@ -791,13 +810,17 @@ class ContinuousBatchingEngine:
                             self._dev_tables, jnp.int32(r),
                             jnp.asarray(self.kv.tables[r]))
                 self.table_rows_shipped += len(rows)
-            next_tok, logits, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(self.tokens),
-                jnp.asarray(self.cache_len), self._dev_tables)
+            with obs.get_telemetry().span("serve.decode",
+                                          batch=len(active)):
+                next_tok, logits, self.cache = self._decode(
+                    self.params, self.cache, jnp.asarray(self.tokens),
+                    jnp.asarray(self.cache_len), self._dev_tables)
         else:
-            next_tok, logits, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(self.tokens),
-                jnp.asarray(self.cache_len))
+            with obs.get_telemetry().span("serve.decode",
+                                          batch=len(active)):
+                next_tok, logits, self.cache = self._decode(
+                    self.params, self.cache, jnp.asarray(self.tokens),
+                    jnp.asarray(self.cache_len))
         if self._sampler is None:
             next_np = np.asarray(next_tok)
         else:
@@ -1015,8 +1038,13 @@ def main(argv=None):
                          "encdec/VLM families)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default=None)
+    ap.add_argument("--telemetry-out", default=None,
+                    help="directory for the repro.obs telemetry bundle "
+                         "(metrics.jsonl, spans.jsonl, trace.json, "
+                         "audit.json)")
     args = ap.parse_args(argv)
 
+    tel = obs.enable() if args.telemetry_out else None
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -1087,7 +1115,7 @@ def main(argv=None):
     sample = finished[0].tokens[:12] if 0 in finished else []
     print("sample uid=0:", sample)
     if args.json_out:
-        payload = {
+        payload = obs.versioned({
             "arch": cfg.name, "impl": impl, "slots": args.batch,
             "requests": n_req, "tokens": engine.tokens_out,
             "steps": engine.decode_steps, "occupancy": round(engine.occupancy, 4),
@@ -1096,9 +1124,13 @@ def main(argv=None):
             "finished": {str(u): {"reason": f.reason, "n_tokens": len(f.tokens),
                                   "prompt_len": f.prompt_len}
                          for u, f in finished.items()},
-        }
+        })
         with open(args.json_out, "w") as f:
-            json.dump(payload, f, indent=1)
+            json.dump(obs.encode_record(payload), f, indent=1)
+    if tel is not None:
+        tel.save(args.telemetry_out)
+        print(f"[obs] telemetry bundle -> {args.telemetry_out} "
+              f"({len(tel.tracer.spans())} spans)")
     return finished
 
 

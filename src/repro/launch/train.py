@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config
 from repro.data.pipeline import synthetic_cnn_batch, synthetic_lm_batch
@@ -84,8 +85,13 @@ def main(argv=None):
     ap.add_argument("--upgrade-patience", type=int, default=5)
     ap.add_argument("--timeline-out", default=None,
                     help="write the migration timeline JSON here")
+    ap.add_argument("--telemetry-out", default=None,
+                    help="directory for the repro.obs telemetry bundle "
+                         "(metrics.jsonl, spans.jsonl, trace.json, "
+                         "audit.json)")
     args = ap.parse_args(argv)
 
+    tel = obs.enable() if args.telemetry_out else None
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -143,6 +149,10 @@ def main(argv=None):
     if args.timeline_out:
         result.timeline.save(args.timeline_out)
         print(f"[swan] timeline -> {args.timeline_out}")
+    if tel is not None:
+        tel.save(args.telemetry_out)
+        print(f"[obs] telemetry bundle -> {args.telemetry_out} "
+              f"({len(tel.tracer.spans())} spans)")
     print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
     return losses
 

@@ -309,6 +309,20 @@ class BlockPool:
             out["fragmentation"] = round(self.fragmentation(live_tokens), 4)
         return out
 
+    def publish_metrics(self, metrics, stats: Optional[dict] = None,
+                        **labels) -> None:
+        """Export pool accounting as gauges into a ``repro.obs``
+        MetricsRegistry. ``stats`` may be a precomputed :meth:`stats` dict
+        (e.g. one that already carries fragmentation from live tokens)."""
+        st = stats if stats is not None else self.stats()
+        for key in ("blocks_in_use", "num_free", "cached_blocks",
+                    "shared_blocks", "peak_blocks_in_use", "utilization",
+                    "fragmentation", "total_allocs", "total_shares",
+                    "total_cow", "total_evictions", "n_sequences"):
+            if key in st:
+                metrics.gauge(f"pool_{key}").labels(**labels).set(
+                    float(st[key]))
+
     def check_invariants(self) -> None:
         """Assert conservation: every usable block is exactly one of free,
         cached-free, or referenced; refcounts equal table occurrences plus

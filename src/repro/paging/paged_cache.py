@@ -251,3 +251,17 @@ class PagedKVCache:
         if self.prefix is not None:
             out["prefix"] = self.prefix.stats()
         return out
+
+    def publish_metrics(self, metrics, stats: Optional[dict] = None,
+                        **labels) -> None:
+        """Pool gauges plus prefix-sharing hit-rate under one registry."""
+        st = stats if stats is not None else self.stats()
+        self.pool.publish_metrics(metrics, stats=st, **labels)
+        prefix = st.get("prefix")
+        if prefix:
+            metrics.gauge("prefix_hit_rate").labels(**labels).set(
+                float(prefix["hit_rate"]))
+            metrics.gauge("prefix_entries").labels(**labels).set(
+                float(prefix["entries"]))
+            metrics.gauge("prefix_lookups").labels(**labels).set(
+                float(prefix["lookups"]))

@@ -23,6 +23,15 @@ def pytest_runtest_call(item):
         return
 
     def _timed_out(signum, frame):
+        # Telemetry post-mortem: where was the run when it hung? The active
+        # span stack names the phase (tick N, prefill chunk, swap-in...) and
+        # the recent audit tail names the last arbiter decisions. Guarded —
+        # a broken dump must not mask the timeout itself.
+        try:
+            from repro import obs
+            obs.get_telemetry().debug_dump(file=sys.stderr, last=20)
+        except Exception as e:  # pragma: no cover - diagnostics only
+            print(f"[obs] telemetry dump failed: {e!r}", file=sys.stderr)
         raise TimeoutError(
             f"test exceeded REPRO_TEST_TIMEOUT={_TIMEOUT_S}s")
 
