@@ -19,7 +19,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names "
                          "(fig1b,fig2,table2,table3,table4,kernels,decode,"
-                         "paged,prefix,arbitration,chaos,fleet,obs)")
+                         "paged,prefix,spec,arbitration,chaos,fleet,obs)")
     ap.add_argument("--json-out", default="BENCH_run.json",
                     help="machine-readable results path ('' disables)")
     args = ap.parse_args()
@@ -27,8 +27,8 @@ def main() -> None:
     from benchmarks import (arbitration_bench, chaos_bench, decode_bench,
                             figure1b_matmul, figure2_choices, fleet_bench,
                             kernel_bench, obs_bench, paged_bench,
-                            prefix_bench, table2_local, table3_interference,
-                            table4_fl)
+                            prefix_bench, spec_bench, table2_local,
+                            table3_interference, table4_fl)
     benches = {
         "fig1b": figure1b_matmul.run,
         "fig2": figure2_choices.run,
@@ -39,6 +39,7 @@ def main() -> None:
         "decode": lambda: decode_bench.run(fast=not args.full),
         "paged": lambda: paged_bench.run(fast=not args.full),
         "prefix": lambda: prefix_bench.run(fast=not args.full),
+        "spec": lambda: spec_bench.run(fast=not args.full),
         "arbitration": lambda: arbitration_bench.run(fast=not args.full),
         "chaos": lambda: chaos_bench.run(fast=not args.full),
         "fleet": lambda: fleet_bench.run(fast=not args.full),

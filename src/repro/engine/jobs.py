@@ -294,12 +294,18 @@ class ServeRung:
       analogue of shrinking the training microbatch;
     - ``attn_impl``: decode attention kernel override;
     - ``kv_dtype``: KV-cache dtype override ("bfloat16" halves cache
-      traffic; token streams may differ from the f32 rungs).
+      traffic; token streams may differ from the f32 rungs);
+    - ``draft_depth``: speculative-decoding depth override (0 turns
+      speculation off). Emitted streams are invariant to depth, so this is
+      the *cheapest* knob on the ladder — it trades only the speculative
+      speedup, never a request's tokens — and sits above slot caps in the
+      default downgrade order.
     """
     name: str
     slot_cap: Optional[int] = None
     attn_impl: Optional[str] = None
     kv_dtype: Optional[str] = None
+    draft_depth: Optional[int] = None
     interference_sensitivity: float = 1.0
     rel_latency: float = 1.0  # aggregate tokens/s cost of this rung
     latency_estimate_s: Optional[float] = None
@@ -312,25 +318,42 @@ class ServeRung:
                              power_w=1.0, cost_key=(n - position,))
 
 
-def default_serve_ladder(max_batch: int, *, include_bf16_kv: bool = True
+def default_serve_ladder(max_batch: int, *, include_bf16_kv: bool = True,
+                         draft_depth: Optional[int] = None
                          ) -> List[ServeRung]:
     """Serving downgrade ladder: each rung halves decode concurrency (the
     contended-bandwidth knob) and the bottom rung additionally halves KV
     traffic with a bf16 cache. Rungs whose knobs collapse to an earlier
-    rung's (tiny ``max_batch``) are dropped."""
-    specs = [("serve-full", None, None, 1.0),
-             ("serve-capped", max(1, max_batch // 2), None, 1.4),
-             ("serve-lean", max(1, max_batch // 4),
-              "bfloat16" if include_bf16_kv else None, 1.9)]
+    rung's (tiny ``max_batch``) are dropped.
+
+    When the engine speculates (``draft_depth`` > 0), draft-depth rungs are
+    inserted *above* the slot caps: halve the depth, then switch speculation
+    off, and only then start capping slots. Walking depth down costs only
+    the speculative speedup — emitted streams are depth-invariant — while a
+    slot cap costs admitted requests their latency, so speculation is
+    always the first thing thermals take."""
+    bf16 = "bfloat16" if include_bf16_kv else None
+    if draft_depth:
+        specs = [("serve-full", None, None, None, 1.0)]
+        if draft_depth // 2 >= 1:
+            specs.append(("serve-spec-half", None, None,
+                          draft_depth // 2, 1.15))
+        specs += [("serve-spec-off", None, None, 0, 1.3),
+                  ("serve-capped", max(1, max_batch // 2), None, 0, 1.7),
+                  ("serve-lean", max(1, max_batch // 4), bf16, 0, 2.2)]
+    else:
+        specs = [("serve-full", None, None, None, 1.0),
+                 ("serve-capped", max(1, max_batch // 2), None, None, 1.4),
+                 ("serve-lean", max(1, max_batch // 4), bf16, None, 1.9)]
     out: List[ServeRung] = []
     seen = set()
-    for name, cap, kvd, rel in specs:
-        key = (cap if cap is None or cap < max_batch else None, kvd)
+    for name, cap, kvd, depth, rel in specs:
+        key = (cap if cap is None or cap < max_batch else None, kvd, depth)
         if key in seen:
             continue
         seen.add(key)
         out.append(ServeRung(name=name, slot_cap=cap, kv_dtype=kvd,
-                             rel_latency=rel))
+                             draft_depth=depth, rel_latency=rel))
     sens = ladder_sensitivities(len(out))
     for r, s in zip(out, sens):
         r.interference_sensitivity = s
@@ -355,7 +378,9 @@ class ServeJob(SocJob):
         self.engine = engine
         self._requests = list(requests)
         self._rungs = list(rungs) if rungs is not None \
-            else default_serve_ladder(engine.max_batch)
+            else default_serve_ladder(
+                engine.max_batch,
+                draft_depth=getattr(engine, "draft_depth", 0))
         if not self._rungs:
             raise ValueError("need at least one serve rung")
         if latency_fn is not None and any(
@@ -484,6 +509,11 @@ class ServeJob(SocJob):
         g("serve_shed_total").set(float(st["shed"]))
         g("serve_timeouts_total").set(float(st["timeouts"]))
         g("serve_rejected_total").set(float(st["rejected"]))
+        g("serve_draft_depth", "active speculative draft depth").set(
+            float(st.get("draft_depth", 0)))
+        if "spec_acceptance" in st:
+            g("serve_spec_acceptance",
+              "accepted/drafted ratio").set(float(st["spec_acceptance"]))
         head = self.slo_headroom()
         if head is not None:
             g("serve_slo_headroom").set(float(head))
@@ -549,6 +579,8 @@ class ServeJob(SocJob):
         self.engine.set_slot_cap(rung.slot_cap)
         self.engine.set_kv_dtype(rung.kv_dtype)
         self.engine.set_attn_impl(rung.attn_impl)
+        if hasattr(self.engine, "set_draft_depth"):
+            self.engine.set_draft_depth(rung.draft_depth)
 
     def result(self) -> Dict[int, Any]:
         return self.engine.finished

@@ -385,10 +385,15 @@ class SwanRuntime:
                     if prop is not None:
                         proposals.append((job, prop))
                     if tel.enabled:
+                        # labeled by rung so the per-rung quantile table in
+                        # launch.obs_report can separate the ladder's measured
+                        # costs (e.g. per-draft-depth speculative latency)
                         tel.metrics.histogram(
                             "job_step_latency_s",
                             "wall latency of one scheduling quantum").labels(
-                            job=job.name).observe(report.latency_s)
+                            job=job.name,
+                            rung=job.active_rung.name).observe(
+                            report.latency_s)
                 if tick_times:
                     # jobs share the tick; its virtual duration is the slowest
                     self.virtual_time_s += max(tick_times)

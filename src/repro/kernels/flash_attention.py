@@ -621,3 +621,188 @@ def flash_decode_paged(q, k_pool, v_pool, block_table, lengths, *,
         interpret=interp,
         **_decode_grid_params(interp),
     )(lengths, table, q, k_pool, v_pool)
+
+
+# ---------------------------------------------------------------------------
+# speculative decode: q-block of draft positions, causal masking in the tile
+# ---------------------------------------------------------------------------
+
+
+def _spec_decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                        acc_scr, *, block_k: int, scale: float, n_kv: int,
+                        n_draft: int, group: int, lowp: bool):
+    """The single-query decode kernel grown to a q-block of draft positions.
+
+    The q block holds the S = n_draft draft positions of one (batch, KV
+    head) program, flattened together with the G-row query group to
+    (S*G, hd) rows where row r = qi*G + g. ``len_ref[b]`` is the BASE cache
+    length — the valid count *before* the draft KVs were scattered at
+    positions base..base+S-1 — so draft position qi attends cache positions
+    < base + qi + 1: the per-row causal mask lives inside the tile, and the
+    online-softmax carry is per row exactly as in ``_decode_kernel``.
+    """
+    b, ji = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(ji == 0)
+    def _():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    base = len_ref[b]
+
+    @pl.when(ji * block_k < base + n_draft)
+    def _():
+        cdt = jnp.bfloat16 if lowp else jnp.float32
+        q = q_ref[0, 0].reshape(n_draft * group, q_ref.shape[-1])
+        q = (q.astype(jnp.float32) * scale).astype(cdt)            # (S*G, hd)
+        k = k_ref[0, :, 0].astype(cdt)                             # (bk, hd)
+        v = v_ref[0, :, 0].astype(cdt)                             # (bk, hdv)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        kv_idx = ji * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        qi = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+        s = jnp.where(kv_idx < base + qi + 1, s, NEG_INF)
+        m_prev = m_scr[:, :1]
+        l_prev = l_scr[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p.astype(cdt), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ji == n_kv - 1)
+    def _():
+        l = jnp.maximum(l_scr[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).reshape(
+            n_draft, group, acc_scr.shape[-1]).astype(o_ref.dtype)
+
+
+def flash_decode_spec(q, k, v, lengths, *, scale: Optional[float] = None,
+                      block_k: int = 256, interpret: Optional[bool] = None,
+                      lowp: Optional[bool] = None):
+    """Multi-token speculative verify over a ragged contiguous KV cache.
+
+    q: (B, K, S, G, hd) — S draft positions' query heads, grouped per KV
+       head as in ``flash_decode`` (GQA: G = H // K).
+    k: (B, Smax, K, hd)   v: (B, Smax, K, hdv) — cache buffers with the S
+       draft tokens' KV already scattered at positions
+       lengths[b]..lengths[b]+S-1.
+    lengths: (B,) int32 — BASE valid counts (before the drafts); draft
+       position qi of row b attends cache positions < lengths[b] + qi + 1.
+
+    One grid step per KV tile verifies all S positions at once: same
+    (B, K, kv_blocks) grid, scalar-prefetch clamp, and predication as the
+    single-query kernel, with the causal mask applied per q-row inside the
+    tile. Returns (B, K, S, G, hdv). Serving path only (no custom_vjp).
+    """
+    B, K, S, G, hd = q.shape
+    Smax = k.shape[1]
+    hdv = v.shape[-1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(hd)
+    bk = divisor_block(Smax, block_k)
+    n_kv = Smax // bk
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+    interp = resolve_interpret(interpret)
+
+    def q_index(b, kh, j, len_ref):
+        return (b, kh, 0, 0, 0)
+
+    def kv_index(b, kh, j, len_ref):
+        # the last live tile now covers the drafts too: clamp at base + S
+        j = jnp.minimum(j, jnp.maximum(pl.cdiv(len_ref[b] + S, bk) - 1, 0))
+        return (b, j, kh, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, K, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, S, G, hd), q_index),
+            pl.BlockSpec((1, bk, 1, hd), kv_index),
+            pl.BlockSpec((1, bk, 1, hdv), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, S, G, hdv), q_index),
+        scratch_shapes=[
+            pltpu.VMEM((S * G, _LANES), jnp.float32),
+            pltpu.VMEM((S * G, _LANES), jnp.float32),
+            pltpu.VMEM((S * G, hdv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_spec_decode_kernel, block_k=bk, scale=scale,
+                          n_kv=n_kv, n_draft=S, group=G, lowp=attn_bf16(lowp)),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, S, G, hdv), q.dtype),
+        interpret=interp,
+        **_decode_grid_params(interp),
+    )(lengths, q, k, v)
+
+
+def _spec_decode_paged_kernel(len_ref, tbl_ref, *rest, **kw):
+    # as in the single-query paged kernel, the table is consumed entirely by
+    # the BlockSpec index maps; the body is the contiguous spec kernel
+    del tbl_ref
+    _spec_decode_kernel(len_ref, *rest, **kw)
+
+
+def flash_decode_spec_paged(q, k_pool, v_pool, block_table, lengths, *,
+                            scale: Optional[float] = None,
+                            interpret: Optional[bool] = None,
+                            lowp: Optional[bool] = None):
+    """Multi-token speculative verify over a paged (block-pooled) KV cache.
+
+    q: (B, K, S, G, hd) — S draft positions, grouped as in
+       ``flash_decode_spec``. k_pool/v_pool: (num_blocks, block_size, K, .)
+       physical blocks; block_table: (B, T) int32 with blocks mapped through
+       position lengths[b] + S - 1 (the engine appends draft positions before
+       the verify call, so boundary blocks already exist).
+    lengths: (B,) int32 BASE valid counts, as in ``flash_decode_spec``.
+
+    Grid is (B, K, T) with the tile = pool block; dead tiles clamp to the
+    last logical block covering base + S. Returns (B, K, S, G, hdv).
+    """
+    B, K, S, G, hd = q.shape
+    num_blocks, bs = k_pool.shape[0], k_pool.shape[1]
+    hdv = v_pool.shape[-1]
+    T = block_table.shape[1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(hd)
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+    table = jnp.clip(jnp.asarray(block_table, jnp.int32), 0, num_blocks - 1)
+    interp = resolve_interpret(interpret)
+
+    def q_index(b, kh, j, len_ref, tbl_ref):
+        return (b, kh, 0, 0, 0)
+
+    def kv_index(b, kh, j, len_ref, tbl_ref):
+        j = jnp.minimum(j, jnp.maximum(pl.cdiv(len_ref[b] + S, bs) - 1, 0))
+        return (tbl_ref[b, j], 0, kh, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, K, T),
+        in_specs=[
+            pl.BlockSpec((1, 1, S, G, hd), q_index),
+            pl.BlockSpec((1, bs, 1, hd), kv_index),
+            pl.BlockSpec((1, bs, 1, hdv), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, S, G, hdv), q_index),
+        scratch_shapes=[
+            pltpu.VMEM((S * G, _LANES), jnp.float32),
+            pltpu.VMEM((S * G, _LANES), jnp.float32),
+            pltpu.VMEM((S * G, hdv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_spec_decode_paged_kernel, block_k=bs, scale=scale,
+                          n_kv=T, n_draft=S, group=G, lowp=attn_bf16(lowp)),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, S, G, hdv), q.dtype),
+        interpret=interp,
+        **_decode_grid_params(interp),
+    )(lengths, table, q, k_pool, v_pool)

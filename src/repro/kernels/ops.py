@@ -18,7 +18,9 @@ from repro.kernels import ref  # noqa: F401  (oracles re-exported for callers)
 from repro.kernels.backend import default_interpret as _interpret  # noqa: F401
 from repro.kernels.depthwise_conv import depthwise_conv as _dw
 from repro.kernels.flash_attention import (flash_attention_mha, flash_decode,
-                                           flash_decode_paged)
+                                           flash_decode_paged,
+                                           flash_decode_spec,
+                                           flash_decode_spec_paged)
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 
 
@@ -105,6 +107,41 @@ def decode_attention_paged(q, k_pool, v_pool, block_table, lengths):
     lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
     out = flash_decode_paged(qg, k_pool, v_pool, block_table, lengths)
     return out.reshape(B, 1, H, v_pool.shape[-1])
+
+
+def decode_attention_spec(q, k, v, lengths, *, block_k: int = 256):
+    """Speculative multi-token GQA verify against a ragged KV cache, fused.
+
+    q: (B, S, H, hd) — the S draft positions' queries (draft KVs already
+    scattered at positions lengths[b]..lengths[b]+S-1). k,v: (B, Smax, K,
+    hd[v]) cache buffers; lengths: (B,) or scalar BASE valid counts (before
+    the drafts). Draft position qi attends cache positions
+    < lengths[b] + qi + 1 — causal inside the verify tile. One kernel call
+    verifies all S positions; the cache bytes are still streamed once per KV
+    head, amortized over S tokens instead of one.
+    """
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    # (B,S,H,hd) -> (B,K,S,G,hd): group the G heads sharing each KV head,
+    # keeping draft order explicit so the kernel maps row r -> qi = r // G
+    qg = q.reshape(B, S, K, H // K, hd).transpose(0, 2, 1, 3, 4)
+    out = flash_decode_spec(qg, k, v, lengths, block_k=block_k)
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, S, H, v.shape[-1])
+
+
+def decode_attention_spec_paged(q, k_pool, v_pool, block_table, lengths):
+    """Speculative multi-token GQA verify against a paged KV cache.
+
+    q: (B, S, H, hd); pools/table/lengths as in ``decode_attention_paged``,
+    with ``lengths`` the BASE valid counts and the block table covering the
+    draft positions (boundary blocks appended before the verify call).
+    """
+    B, S, H, hd = q.shape
+    K = k_pool.shape[2]
+    qg = q.reshape(B, S, K, H // K, hd).transpose(0, 2, 1, 3, 4)
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+    out = flash_decode_spec_paged(qg, k_pool, v_pool, block_table, lengths)
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, S, H, v_pool.shape[-1])
 
 
 def decode_attention_mla_paged(q_lat, q_rope, latent_pool, k_rope_pool,

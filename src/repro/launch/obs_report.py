@@ -9,6 +9,9 @@ runtime do and why":
 - top spans by total time (count / total / mean / max per span name),
 - the migration audit table — every propose/commit/veto with the
   relinquish scores, SLO headroom and rule that decided it,
+- the per-rung step-latency quantile table (the measured ladder costs the
+  planner's estimates should be checked against — including per-draft-depth
+  speculative verify latency),
 - final metric values from the last snapshot line.
 
 ``--chrome-trace OUT`` re-derives a Chrome-trace JSON from ``spans.jsonl``
@@ -58,6 +61,56 @@ def span_table(spans: List[Dict[str, Any]], top: int = 0) -> List[Dict[str, Any]
             for name, a in agg.items()]
     rows.sort(key=lambda r: -r["total_us"])
     return rows[:top] if top else rows
+
+
+def _parse_labels(flat_key: str) -> Dict[str, str]:
+    """``name{k=v,k2=v2}`` -> label dict (empty for unlabeled keys)."""
+    if "{" not in flat_key:
+        return {}
+    inner = flat_key[flat_key.index("{") + 1:flat_key.rindex("}")]
+    out: Dict[str, str] = {}
+    for part in inner.split(","):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k] = v
+    return out
+
+
+def rung_latency_table(final: Dict[str, Any],
+                       metric: str = "job_step_latency_s"
+                       ) -> List[Dict[str, Any]]:
+    """Per-(job, rung) quantile rows from the final snapshot's histogram
+    summaries — the measured per-rung step costs the planner's estimates
+    should be checked against (and, for a speculating ServeJob, the
+    per-draft-depth latency of the verify rounds)."""
+    rows: List[Dict[str, Any]] = []
+    for key, val in final.items():
+        if not key.startswith(metric) or not isinstance(val, dict):
+            continue
+        labels = _parse_labels(key)
+        rows.append({"job": labels.get("job", "-"),
+                     "rung": labels.get("rung", "-"),
+                     "count": val.get("count"), "mean": val.get("mean"),
+                     "p50": val.get("p50"), "p90": val.get("p90"),
+                     "p99": val.get("p99"), "max": val.get("max")})
+    rows.sort(key=lambda r: (r["job"], r["rung"]))
+    return rows
+
+
+def print_rung_latency_table(rows: List[Dict[str, Any]], file=None) -> None:
+    if not rows:
+        print("  (no per-rung latency samples)", file=file)
+        return
+    print(f"  {'job':<10} {'rung':<18} {'n':>5} {'mean':>9} {'p50':>9} "
+          f"{'p90':>9} {'p99':>9} {'max':>9}", file=file)
+
+    def ms(v):
+        return f"{v * 1e3:8.2f}m" if isinstance(v, (int, float)) else "       -"
+
+    for r in rows:
+        print(f"  {r['job']:<10} {r['rung']:<18} {r['count'] or 0:>5} "
+              f"{ms(r['mean'])} {ms(r['p50'])} {ms(r['p90'])} {ms(r['p99'])} "
+              f"{ms(r['max'])}", file=file)
 
 
 def _fmt_scores(scores: Dict[str, Any]) -> str:
@@ -142,6 +195,10 @@ def report(outdir: str, *, top: int = 15, audit_limit: int = 40,
         if lines:
             final = lines[-1].get("metrics", {})
     out["final_metrics"] = final
+    out["rung_latency"] = rung_latency_table(final)
+    print("\n== per-rung step latency quantiles ==")
+    print_rung_latency_table(out["rung_latency"])
+
     print(f"\n== final metric values ({len(final)}) ==")
     for key in sorted(final):
         v = final[key]

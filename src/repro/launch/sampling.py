@@ -1,0 +1,44 @@
+"""Shared logits shaping for every sampling consumer.
+
+One implementation of temperature/top-k masking feeds both the engine's
+fallback sampler (``launch.steps.build_sampler``) and the speculative
+verifier (``repro.spec.verify``). Rejection sampling is only
+distribution-faithful if the accept test and the fallback sample agree on
+the target distribution — keeping the masking here makes drift between the
+two structurally impossible.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mask_logits(logits, temperature: float, top_k: int = 0):
+    """(..., V) raw logits -> fp32 temperature-scaled, top-k-masked logits.
+
+    ``top_k > 0`` masks everything below the k-th largest logit to -inf.
+    Works on any leading batch shape — (B, V) engine rows and (B, S, V)
+    speculative verify windows share the exact same shaping.
+    """
+    if temperature <= 0.0:
+        raise ValueError("mask_logits needs temperature > 0; greedy "
+                         "decoding never shapes logits")
+    lg = logits.astype(jnp.float32) / temperature
+    if top_k:
+        kth = jax.lax.top_k(lg, top_k)[0][..., -1:]
+        lg = jnp.where(lg < kth, -jnp.inf, lg)
+    return lg
+
+
+def sample_probs(logits, temperature: float, top_k: int = 0):
+    """The sampling distribution implied by (temperature, top_k): softmax of
+    the masked logits. This is the q(x) the rejection test accepts against
+    and the distribution the faithfulness property test checks."""
+    return jax.nn.softmax(mask_logits(logits, temperature, top_k), axis=-1)
+
+
+def categorical(keys, logits, temperature: float, top_k: int = 0):
+    """Sample one token per leading row. keys: (B, 2) uint32 per-row PRNG
+    keys (the engine's fold_in(seed, uid, index) streams); logits: (B, V)."""
+    lg = mask_logits(logits, temperature, top_k)
+    return jax.vmap(jax.random.categorical)(keys, lg).astype(jnp.int32)

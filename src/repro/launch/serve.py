@@ -53,6 +53,18 @@ Sampling: greedy by default; ``--temperature/--top-k`` switch the emitted
 stream to seeded sampling with a per-request PRNG key (a request's stream
 is independent of how it was batched). Parity gates keep using greedy.
 
+Speculative decoding (``--draft-depth k``, ``--draft-source``): a draft
+source (``repro.spec.draft``) proposes k cheap tokens per request, one
+multi-token verify pass (the flash-decode kernel grown to a q-block)
+scores the whole window, and the engine emits the accepted prefix plus
+one non-draft token per round. Greedy mode is token-identical to
+non-speculative decoding; sampled mode is distribution-faithful rejection
+sampling on the same fold_in(seed, uid, index) streams. Rollback is pure
+cache_len bookkeeping — rejected positions keep stale KV, masked dead by
+the ragged-length kernels and overwritten next round. Draft depth is a
+serving rung (``engine.jobs.ServeRung.draft_depth``): the arbiter walks
+speculation down before capping slots when thermals bite.
+
 ``--bucket-prompts`` rounds admission prefill lengths up to power-of-two
 buckets so the prefill jit cache stops growing per unique prompt length.
 
@@ -70,6 +82,7 @@ from __future__ import annotations
 import argparse
 import collections
 import dataclasses
+import functools
 import json
 import time
 from typing import Deque, Dict, List, Optional, Tuple
@@ -82,7 +95,10 @@ from repro import obs
 from repro.configs import get_config
 from repro.kernels.backend import auto_decode_impl
 from repro.launch.steps import (build_decode_step, build_paged_decode_step,
-                                build_paged_prefill_step, build_sampler)
+                                build_paged_prefill_step, build_sampler,
+                                build_paged_spec_decode_step,
+                                build_spec_decode_step)
+from repro.spec.verify import greedy_verify, rejection_verify
 from repro.models.registry import build_model
 from repro.paging import BlockPoolExhausted, PagedKVCache
 
@@ -154,7 +170,8 @@ class ContinuousBatchingEngine:
                  sample_seed: int = 0, bucket_prompts: bool = False,
                  admission_policy: str = "serialize",
                  max_queue: Optional[int] = None,
-                 prefix_cache: bool = True, swap_grace: int = 2):
+                 prefix_cache: bool = True, swap_grace: int = 2,
+                 draft_depth: int = 0, draft_source=None):
         cfg = model.cfg
         if cfg.family not in ENGINE_FAMILIES:
             raise ValueError(
@@ -240,6 +257,29 @@ class ContinuousBatchingEngine:
             # host-side fold_in pair per slot
             self._keys = jax.jit(jax.vmap(
                 lambda u, i: jax.random.fold_in(jax.random.fold_in(base, u), i)))
+            # (B, S) key grid for speculative verify: same fold_in(seed,
+            # uid, index) streams, one key per candidate emission index, so
+            # a request's randomness stays batch-composition independent
+            self._keys2 = jax.jit(jax.vmap(jax.vmap(
+                lambda u, i: jax.random.fold_in(jax.random.fold_in(base, u), i))))
+            self._rej_verify = jax.jit(functools.partial(
+                rejection_verify, temperature=self.temperature,
+                top_k=self.top_k))
+        self._greedy_verify = jax.jit(greedy_verify)
+
+        # speculative decoding: a draft source proposes k tokens per slot,
+        # one multi-token verify pass scores the whole window, the engine
+        # emits the accepted prefix + 1. Depth is a serving rung
+        # (engine.jobs.ServeRung.draft_depth) the arbiter can walk down.
+        self._base_draft_depth = max(0, int(draft_depth))
+        self.draft_depth = self._base_draft_depth
+        self.draft = draft_source
+        if self.draft is None and self.draft_depth > 0:
+            from repro.spec.draft import NGramDraft
+            self.draft = NGramDraft()
+        self.spec_rounds = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
 
         self._prefill = jax.jit(model.prefill)  # one compile per prompt length
 
@@ -316,6 +356,19 @@ class ContinuousBatchingEngine:
                 return jax.tree_util.tree_map(one, cache, pcache)
 
             self._splice = jax.jit(splice, donate_argnums=(0,))
+
+        self._build_spec_steps(model)
+
+    def _build_spec_steps(self, model) -> None:
+        """(Re)build the multi-token verify step for the active layout;
+        None when the family has no speculative decode path (the engine
+        then falls back to one-token steps whatever the draft depth)."""
+        if self.kv is not None:
+            self._spec_decode = build_paged_spec_decode_step(model) \
+                if model.paged_spec_decode_step is not None else None
+        else:
+            self._spec_decode = build_spec_decode_step(model) \
+                if model.spec_decode_step is not None else None
 
     # -- request lifecycle -------------------------------------------------
 
@@ -457,6 +510,8 @@ class ContinuousBatchingEngine:
                 swapped_at=self.decode_steps)
             self.slot_uid[slot] = None
             self.kv.release(slot)
+            if self.draft is not None:
+                self.draft.release(slot)
             self.swap_outs += 1
 
     def _swap_in(self, slot: int, sw: SwappedSeq) -> None:
@@ -475,6 +530,11 @@ class ContinuousBatchingEngine:
         self.tokens[slot, 0] = sw.next_token
         self.generated[slot] = list(sw.generated)
         self._resident_since[slot] = self.decode_steps
+        if self.draft is not None:
+            # the parked record keeps no prompt, so the draft restarts from
+            # the generated history alone — weaker proposals for a while,
+            # never wrong ones (verification is sound whatever p is)
+            self.draft.admit(slot, sw.generated)
         self.swap_ins += 1
 
     def _try_swap_in(self) -> None:
@@ -573,6 +633,9 @@ class ContinuousBatchingEngine:
         self.admission_waits[req.uid] = max(
             0, self.decode_steps - max(req.submitted_at, 0))
         self.tokens_out += 1
+        if self.draft is not None:
+            self.draft.admit(slot, [int(t) for t in req.prompt])
+            self.draft.commit(slot, [], first)  # first emission, no drafts
         if self._should_retire(slot, first):  # budget of 1, or prefill hit EOS
             self._retire(slot, "eos" if first == self.eos_id else "length")
 
@@ -634,6 +697,8 @@ class ContinuousBatchingEngine:
             uid=uid, tokens=list(self.generated[slot]), reason=reason,
             prompt_len=self._uid_prompt_len.pop(uid))
         self.slot_uid[slot] = None
+        if self.draft is not None:
+            self.draft.release(slot)
         if self.kv is not None:
             # blocks go back to the pool; the slot's table row resets to the
             # null block so its masked idle-slot writes stay harmless
@@ -695,6 +760,31 @@ class ContinuousBatchingEngine:
         else:
             self._decode = build_decode_step(model,
                                              greedy=self._sampler is None)
+        self._build_spec_steps(model)
+
+    def set_draft_depth(self, k: Optional[int]) -> None:
+        """Serving-rung knob: verify ``k`` draft tokens per engine step
+        (0 disables speculation; ``None`` restores the as-built depth).
+
+        Takes effect on the next step — residents and the KV cache are
+        untouched, because rollback is already cache_len bookkeeping: a
+        depth change just alters how many candidate positions the next
+        verify pass scores. Emitted streams are invariant to depth (greedy
+        is token-identical at any k; sampled stays distribution-faithful),
+        which is what makes draft depth safe to walk under thermal or
+        energy pressure."""
+        depth = self._base_draft_depth if k is None else max(0, int(k))
+        if depth == self.draft_depth:
+            return
+        self.draft_depth = depth
+        if depth > 0 and self.draft is None:
+            # late enable on an engine built without a source: self-draft
+            # from each resident's own emitted history
+            from repro.spec.draft import NGramDraft
+            self.draft = NGramDraft()
+            for slot in range(self.max_batch):
+                if self.slot_uid[slot] is not None:
+                    self.draft.admit(slot, self.generated[slot])
 
     # -- stepping ----------------------------------------------------------
 
@@ -760,6 +850,60 @@ class ContinuousBatchingEngine:
                         return
                 break
 
+    def _append_positions(self, active: List[int], n: int) -> None:
+        """Allocate-on-boundary for the next ``n`` cache positions of every
+        active slot (n = 1 plain decode, k+1 speculative window). Re-append
+        of an already-owned private position is a no-op, so a speculative
+        round that rolled back simply re-covers the same positions."""
+        for slot in active:
+            cl = int(self.cache_len[slot])
+            for i in range(n):
+                ev = self.kv.append(slot, cl + i)
+                if ev is not None and ev.kind == "cow":
+                    # first divergent write into a shared block: give this
+                    # sequence a private copy, device-side, before decode
+                    with obs.get_telemetry().span("serve.cow_copy",
+                                                  slot=slot, src=ev.src,
+                                                  dst=ev.block):
+                        self.cache = self._copy_block(
+                            self.cache, jnp.int32(ev.src),
+                            jnp.int32(ev.block))
+                    self.cow_copies += 1
+
+    def _ship_dirty_tables(self) -> None:
+        rows = self.kv.take_dirty()
+        if not rows:
+            return
+        # ship only the table rows that changed since last step; bulk dirt
+        # (e.g. after a swap storm) falls back to one full upload instead
+        # of a row-by-row drip
+        if len(rows) > max(1, self.max_batch // 2):
+            self._dev_tables = jnp.asarray(self.kv.tables)
+            self.table_uploads += 1
+        else:
+            for r in rows:
+                self._dev_tables = self._set_row(
+                    self._dev_tables, jnp.int32(r),
+                    jnp.asarray(self.kv.tables[r]))
+        self.table_rows_shipped += len(rows)
+
+    def _spec_k(self, active: List[int]) -> int:
+        """Effective draft depth this step: the configured depth clamped so
+        the verify window (a) never writes past the cache (positions
+        cache_len..cache_len+k must fit), and (b) never allocates past a
+        paged reservation — k at most the smallest remaining generation
+        budget keeps the worst-case block accounting exact. 0 falls back
+        to the one-token step."""
+        if self.draft_depth < 1 or self.draft is None or \
+                self._spec_decode is None:
+            return 0
+        k = min(self.draft_depth,
+                self.max_seq - 1 - max(int(self.cache_len[s])
+                                       for s in active),
+                min(int(self.slot_budget[s]) - len(self.generated[s])
+                    for s in active))
+        return max(k, 0)
+
     def step(self) -> List[Tuple[int, int]]:
         """Admit waiting requests, run one batched decode, retire finishers.
 
@@ -783,33 +927,12 @@ class ContinuousBatchingEngine:
                         f"for {self._stalled_steps} steps")
             return []
         self._stalled_steps = 0
+        k = self._spec_k(active)
+        if k >= 1:
+            return self._step_speculative(active, k)
         if self.kv is not None:
-            for slot in active:  # allocate-on-boundary for this step's write
-                ev = self.kv.append(slot, int(self.cache_len[slot]))
-                if ev is not None and ev.kind == "cow":
-                    # first divergent write into a shared block: give this
-                    # sequence a private copy, device-side, before decode
-                    with obs.get_telemetry().span("serve.cow_copy",
-                                                  slot=slot, src=ev.src,
-                                                  dst=ev.block):
-                        self.cache = self._copy_block(
-                            self.cache, jnp.int32(ev.src),
-                            jnp.int32(ev.block))
-                    self.cow_copies += 1
-            rows = self.kv.take_dirty()
-            if rows:
-                # ship only the table rows that changed since last step;
-                # bulk dirt (e.g. after a swap storm) falls back to one
-                # full upload instead of a row-by-row drip
-                if len(rows) > max(1, self.max_batch // 2):
-                    self._dev_tables = jnp.asarray(self.kv.tables)
-                    self.table_uploads += 1
-                else:
-                    for r in rows:
-                        self._dev_tables = self._set_row(
-                            self._dev_tables, jnp.int32(r),
-                            jnp.asarray(self.kv.tables[r]))
-                self.table_rows_shipped += len(rows)
+            self._append_positions(active, 1)
+            self._ship_dirty_tables()
             with obs.get_telemetry().span("serve.decode",
                                           batch=len(active)):
                 next_tok, logits, self.cache = self._decode(
@@ -840,9 +963,111 @@ class ContinuousBatchingEngine:
             self.tokens[slot, 0] = tok
             self.tokens_out += 1
             emitted.append((self.slot_uid[slot], tok))
+            if self.draft is not None:
+                # keep the draft's view of the stream current even while
+                # speculation is off (depth walked to 0, or a clamped round)
+                self.draft.commit(slot, [], tok)
             if self._should_retire(slot, tok):
                 self._retire(slot, "eos" if (self.eos_id is not None and
                                              tok == self.eos_id) else "length")
+        return emitted
+
+    def _step_speculative(self, active: List[int], k: int) -> List[Tuple[int, int]]:
+        """One speculative round: draft k tokens per active slot, score the
+        (k+1)-token window [last_emitted, d_1..d_k] in ONE verify pass,
+        emit the accepted prefix plus exactly one non-draft token.
+
+        Rollback is pure cache_len bookkeeping: the verify pass scattered
+        KV for every window position, but cache_len only advances over the
+        emitted tokens — rejected positions' KV stays resident, masked dead
+        by the ragged-length kernels, and is overwritten in place by the
+        next round's scatter. Greedy verification makes the emitted stream
+        token-identical to one-token greedy decode; sampled mode is
+        distribution-faithful rejection sampling on the engine's
+        fold_in(seed, uid, index) streams."""
+        S = k + 1
+        tel = obs.get_telemetry()
+        with tel.span("serve.spec_draft", batch=len(active), k=k):
+            drafts, dprobs = self.draft.propose(active, k)
+        win = np.zeros((self.max_batch, S), np.int32)
+        win[:, 0] = self.tokens[:, 0]
+        probs_b = None
+        if dprobs is not None:
+            probs_b = np.zeros((self.max_batch, k, dprobs.shape[-1]),
+                               np.float32)
+        for row, slot in enumerate(active):
+            win[slot, 1:] = drafts[row]
+            if probs_b is not None:
+                probs_b[slot] = dprobs[row]
+        if self.kv is not None:
+            self._append_positions(active, S)
+            self._ship_dirty_tables()
+            with tel.span("serve.spec_verify", batch=len(active), k=k):
+                logits, self.cache = self._spec_decode(
+                    self.params, self.cache, jnp.asarray(win),
+                    jnp.asarray(self.cache_len), self._dev_tables)
+        else:
+            with tel.span("serve.spec_verify", batch=len(active), k=k):
+                logits, self.cache = self._spec_decode(
+                    self.params, self.cache, jnp.asarray(win),
+                    jnp.asarray(self.cache_len))
+        if self._sampler is None:
+            toks, n_emit = self._greedy_verify(logits,
+                                               jnp.asarray(win[:, 1:]))
+        else:
+            uids = np.asarray(
+                [self.slot_uid[s] if self.slot_uid[s] is not None else 0
+                 for s in range(self.max_batch)], np.int32)
+            idxs = (np.asarray([len(self.generated[s])
+                                for s in range(self.max_batch)],
+                               np.int32)[:, None]
+                    + np.arange(S, dtype=np.int32)[None])
+            keys = self._keys2(
+                jnp.asarray(np.broadcast_to(uids[:, None],
+                                            (self.max_batch, S))),
+                jnp.asarray(idxs))
+            toks, n_emit = self._rej_verify(
+                logits, jnp.asarray(win[:, 1:]),
+                None if probs_b is None else jnp.asarray(probs_b), keys)
+        tok_np = np.asarray(toks)
+        n_np = np.asarray(n_emit)
+        self.decode_steps += 1
+        self._active_slot_steps += len(active)
+        emitted: List[Tuple[int, int]] = []
+        accepted_total = 0
+        for slot in active:
+            uid = self.slot_uid[slot]
+            seq = [int(t) for t in tok_np[slot, :int(n_np[slot])]]
+            self.spec_rounds += 1
+            self.spec_drafted += k
+            self.spec_accepted += len(seq) - 1
+            accepted_total += len(seq) - 1
+            retired = False
+            for tok in seq:
+                self.generated[slot].append(tok)
+                self.cache_len[slot] += 1
+                self.tokens[slot, 0] = tok
+                self.tokens_out += 1
+                emitted.append((uid, tok))
+                if self._should_retire(slot, tok):
+                    # the retire trims the round: later accepted tokens are
+                    # dropped and their KV stays masked dead, exactly like
+                    # a rejection
+                    self._retire(slot, "eos" if (self.eos_id is not None and
+                                                 tok == self.eos_id)
+                                 else "length")
+                    retired = True
+                    break
+            if not retired:
+                self.draft.commit(slot, seq[:-1], seq[-1])
+        m = tel.metrics
+        m.counter("spec_drafted_total",
+                  "draft tokens proposed to the verifier").inc(k * len(active))
+        m.counter("spec_accepted_total",
+                  "draft tokens accepted by the verifier").inc(accepted_total)
+        m.gauge("spec_acceptance_rate",
+                "running accepted/drafted ratio").set(
+            self.spec_accepted / max(1, self.spec_drafted))
         return emitted
 
     def run(self, requests: List[Request]) -> Dict[int, Finished]:
@@ -903,6 +1128,13 @@ class ContinuousBatchingEngine:
         out["admission_wait_mean"] = \
             round(sum(waits) / len(waits), 3) if waits else 0.0
         out["admission_wait_max"] = max(waits) if waits else 0
+        out["draft_depth"] = self.draft_depth
+        if self.spec_rounds:
+            out["spec_rounds"] = self.spec_rounds
+            out["spec_drafted"] = self.spec_drafted
+            out["spec_accepted"] = self.spec_accepted
+            out["spec_acceptance"] = round(
+                self.spec_accepted / max(1, self.spec_drafted), 4)
         if self.kv is not None:
             out["held_blocks"] = self._held_blocks
             out["prefill_chunks"] = self.prefill_chunks
@@ -1029,6 +1261,14 @@ def main(argv=None):
     ap.add_argument("--swap-grace", type=int, default=2,
                     help="swap policy: steps a just-admitted/restored "
                          "sequence is protected from swap-out")
+    ap.add_argument("--draft-depth", type=int, default=0,
+                    help="speculative decoding: draft tokens verified per "
+                         "engine step (0 = off); also a serving rung the "
+                         "arbiter walks down under pressure")
+    ap.add_argument("--draft-source", default="ngram",
+                    help="where drafts come from: 'ngram' (self-drafting "
+                         "n-gram head) or a registry arch name served "
+                         "reduced as a draft model")
     ap.add_argument("--bucket-prompts", action="store_true",
                     help="round admission prefill lengths up to power-of-two "
                          "buckets (bounds prefill jit-cache growth)")
@@ -1083,6 +1323,13 @@ def main(argv=None):
     n_req = args.requests or 3 * args.batch
     reqs = _synthetic_requests(rng, n_req, args.prompt_len, args.gen,
                                cfg.vocab_size)
+    draft = None
+    if args.draft_depth > 0:
+        from repro.spec.draft import build_draft_source
+        draft = build_draft_source(
+            args.draft_source, target_cfg=cfg, max_batch=args.batch,
+            max_seq=max_seq, temperature=args.temperature,
+            top_k=args.top_k, seed=args.sample_seed)
     engine = ContinuousBatchingEngine(
         model, params, max_batch=args.batch, max_seq=max_seq,
         eos_id=args.eos_id, kv_layout=args.kv_layout,
@@ -1090,7 +1337,8 @@ def main(argv=None):
         temperature=args.temperature, top_k=args.top_k,
         sample_seed=args.sample_seed, bucket_prompts=args.bucket_prompts,
         admission_policy=args.admission_policy,
-        prefix_cache=not args.no_prefix_cache, swap_grace=args.swap_grace)
+        prefix_cache=not args.no_prefix_cache, swap_grace=args.swap_grace,
+        draft_depth=args.draft_depth, draft_source=draft)
     t0 = time.time()
     finished = engine.run(reqs)
     dt = time.time() - t0
@@ -1099,6 +1347,10 @@ def main(argv=None):
           f"slots={args.batch} requests={n_req} tokens={engine.tokens_out} "
           f"steps={engine.decode_steps} occupancy={engine.occupancy:.2f} "
           f"wall={dt*1e3:.0f}ms ({tok_s:.1f} tok/s)")
+    if engine.spec_rounds:
+        print(f"spec: depth={engine.draft_depth} source={args.draft_source} "
+              f"accepted {engine.spec_accepted}/{engine.spec_drafted} drafts "
+              f"({engine.spec_accepted / max(1, engine.spec_drafted):.2f})")
     if args.kv_layout == "paged":
         st = engine.stats()
         pool = st["pool"]

@@ -166,23 +166,63 @@ def build_sampler(temperature: float, top_k: int = 0, *, jit: bool = True):
     """Returns f(logits (B, V), keys (B, 2) uint32) -> (B,) sampled int32 ids.
 
     Temperature scales the logits; ``top_k > 0`` masks everything below the
-    k-th logit before sampling. Keys are per-sequence PRNG keys (one row per
-    slot) so sampling stays independent of batch composition — the serve
-    engine derives them per request uid and generation index, which makes a
-    request's sampled stream identical however it was batched.
+    k-th logit before sampling — both via the shared masking in
+    :mod:`repro.launch.sampling`, which the speculative verifier also uses
+    (accept-test and fallback-sample distributions cannot drift). Keys are
+    per-sequence PRNG keys (one row per slot) so sampling stays independent
+    of batch composition — the serve engine derives them per request uid and
+    generation index, which makes a request's sampled stream identical
+    however it was batched.
     """
+    from repro.launch.sampling import categorical
+
     if temperature <= 0.0:
         raise ValueError("build_sampler needs temperature > 0; greedy "
                          "decoding is the decode step's argmax")
 
     def sample(logits, keys):
-        lg = logits.astype(jnp.float32) / temperature
-        if top_k:
-            kth = jax.lax.top_k(lg, top_k)[0][:, -1:]
-            lg = jnp.where(lg < kth, -jnp.inf, lg)
-        return jax.vmap(jax.random.categorical)(keys, lg).astype(jnp.int32)
+        return categorical(keys, logits, temperature, top_k)
 
     return jax.jit(sample) if jit else sample
+
+
+def build_spec_decode_step(model: Model, *, jit: bool = True,
+                           donate: bool = True):
+    """Speculative verify step: score a (B, S) draft window in one pass.
+
+    Same donation contract as :func:`build_decode_step`. Returns
+    (logits (B, S, V), new_cache): row qi of the logits is the target
+    model's next-token distribution after window position qi, which is what
+    both greedy verification (argmax chain) and rejection sampling consume.
+    No argmax is fused here — accept/rollback in :mod:`repro.spec.verify`
+    needs the full rows either way.
+    """
+    if model.spec_decode_step is None:
+        raise ValueError(f"family {model.cfg.family!r} has no speculative "
+                         f"decode path")
+
+    def spec_step(params, cache, tokens, cache_len):
+        return model.spec_decode_step(params, cache, tokens, cache_len)
+
+    if not jit:
+        return spec_step
+    return jax.jit(spec_step, donate_argnums=(1,) if donate else ())
+
+
+def build_paged_spec_decode_step(model: Model, *, jit: bool = True,
+                                 donate: bool = True):
+    """Speculative verify step over a paged KV cache (block-table routed)."""
+    if model.paged_spec_decode_step is None:
+        raise ValueError(f"family {model.cfg.family!r} has no paged "
+                         f"speculative decode path")
+
+    def spec_step(params, cache, tokens, cache_len, block_table):
+        return model.paged_spec_decode_step(params, cache, tokens, cache_len,
+                                            block_table)
+
+    if not jit:
+        return spec_step
+    return jax.jit(spec_step, donate_argnums=(1,) if donate else ())
 
 
 def greedy_decode_tokens(model: Model, params, tokens, *, steps: int,

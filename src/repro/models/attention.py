@@ -79,6 +79,9 @@ def naive_attention(q, k, v, *, causal: bool, q_offset=0, kv_len: Optional[jax.A
     ``kv_len`` may be a scalar or a per-sequence (B,) vector (ragged decode
     under continuous batching); rows must keep kv_len >= 1 to stay
     well-defined — a fully-masked row softmaxes to uniform, not zero.
+    ``q_offset`` may likewise be a (B,) vector: query row qi of sequence b
+    then attends positions <= q_offset[b] + qi (the speculative-verify
+    oracle, where each sequence's draft window starts at its own cache_len).
     """
     B, Sq, H, hd = q.shape
     K = k.shape[2]
@@ -90,10 +93,15 @@ def naive_attention(q, k, v, *, causal: bool, q_offset=0, kv_len: Optional[jax.A
     kv_idx = jnp.arange(Sk)
     mask = jnp.ones((Sq, Sk), bool)
     if causal:
-        q_idx = jnp.arange(Sq) + q_offset
-        mask = kv_idx[None, :] <= q_idx[:, None]
+        if jnp.ndim(q_offset) > 0:  # per-sequence window starts
+            q_idx = jnp.arange(Sq)[None] + q_offset[:, None]     # (B, Sq)
+            mask = kv_idx[None, None, :] <= q_idx[:, :, None]    # (B, Sq, Sk)
+        else:
+            q_idx = jnp.arange(Sq) + q_offset
+            mask = kv_idx[None, :] <= q_idx[:, None]
     if kv_len is not None and jnp.ndim(kv_len) > 0:  # per-sequence lengths
-        mask = mask[None] & (kv_idx[None, None, :] < kv_len[:, None, None])
+        lenm = kv_idx[None, None, :] < kv_len[:, None, None]
+        mask = (mask[None] if mask.ndim == 2 else mask) & lenm
     elif kv_len is not None:
         mask = mask & (kv_idx[None, :] < kv_len)
     if mask.ndim == 2:
@@ -276,6 +284,34 @@ def _scatter_token_paged(pool, new, cache_len, block_table):
     return pool.at[phys, cl % bs].set(new[:, 0].astype(pool.dtype))
 
 
+def _scatter_tokens(buf, new, cache_len):
+    """Write ``new`` (B,S,...) into ``buf`` (B,Smax,...) at seq positions
+    cache_len..cache_len+S-1 (the speculative draft window). Scalar
+    cache_len is one dynamic slice; per-sequence (B,) routes each buffer
+    position p to draft index p - cache_len[b] via a masked gather."""
+    S = new.shape[1]
+    if jnp.ndim(cache_len) == 0:
+        return jax.lax.dynamic_update_slice_in_dim(
+            buf, new.astype(buf.dtype), cache_len, 1)
+    rel = jnp.arange(buf.shape[1])[None] - cache_len[:, None]      # (B,Smax)
+    idx = jnp.clip(rel, 0, S - 1).reshape(
+        rel.shape + (1,) * (buf.ndim - 2))
+    sel = jnp.take_along_axis(new.astype(buf.dtype), idx, axis=1)
+    valid = ((rel >= 0) & (rel < S)).reshape(idx.shape)
+    return jnp.where(valid, sel, buf)
+
+
+def _scatter_tokens_paged(pool, new, cache_len, block_table):
+    """Write ``new`` (B,S,...) into a block pool at virtual positions
+    cache_len..cache_len+S-1 of each sequence. The window is at most a few
+    tokens, so S single-position scatters (each one indexed pool update)
+    beat building a multi-hot routing tensor over the whole pool."""
+    cl = jnp.asarray(cache_len, jnp.int32)
+    for i in range(new.shape[1]):
+        pool = _scatter_token_paged(pool, new[:, i:i + 1], cl + i, block_table)
+    return pool
+
+
 def _scatter_chunk_paged(pool, new, start, block_table):
     """Write one block-aligned chunk ``new`` (B, block_size, ...) into a
     block pool at virtual positions [start, start + block_size), routed
@@ -445,6 +481,79 @@ def gqa_decode_paged(p, x, cache, cache_len, block_table, cfg, *,
                               gather_paged_kv(cv, block_table),
                               causal=False, kv_len=cache_len + 1)
     y = out.reshape(B, 1, cfg.n_heads * hd) @ p["wo"]
+    return y, new_cache
+
+
+def gqa_decode_spec(p, x, cache, cache_len, cfg, *, impl: str = "naive"):
+    """Speculative multi-token decode: verify S draft positions in one pass.
+
+    x: (B,S,d) — the last accepted token followed by S-1 draft tokens, so
+    position qi of the window sits at cache slot cache_len + qi. All S
+    tokens' KV are scattered into the cache (rollback is the *caller's*
+    cache_len bookkeeping: rejected tail KVs stay resident but are masked
+    dead by every later call's length arguments), then each position
+    attends causally inside the window on top of its sequence's history:
+    positions < cache_len + qi + 1. Returns (B,S,d) activations — the
+    logits at window position qi score draft token qi+1, exactly the
+    verify distribution rejection sampling needs.
+    """
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k_new = (x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v_new = (x @ p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.pos_embedding == "rope":
+        pos = _decode_positions(cache_len, B) + jnp.arange(S, dtype=jnp.int32)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k_new = apply_rope(k_new, pos, cfg.rope_theta)
+    ck = _scatter_tokens(cache["k"], k_new, cache_len)
+    cv = _scatter_tokens(cache["v"], v_new, cache_len)
+    ck = shard(ck, "batch", "kvseq", None, None)
+    cv = shard(cv, "batch", "kvseq", None, None)
+    new_cache = {"k": ck, "v": cv}
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.decode_attention_spec(q, ck, cv, cache_len)
+    else:
+        out = naive_attention(q, ck, cv, causal=True, q_offset=cache_len)
+    y = out.reshape(B, S, cfg.n_heads * hd) @ p["wo"]
+    return y, new_cache
+
+
+def gqa_decode_spec_paged(p, x, cache, cache_len, block_table, cfg, *,
+                          impl: str = "naive"):
+    """Speculative multi-token decode over a paged KV cache.
+
+    Same verify-window math as :func:`gqa_decode_spec`; the S draft KVs are
+    scattered through the block table (the engine appends boundary blocks
+    for positions cache_len..cache_len+S-1 before the call), and rollback is
+    again pure cache_len bookkeeping — rejected positions' blocks stay
+    mapped, their stale contents masked dead and overwritten by the next
+    window.
+    """
+    from repro.paging import gather_paged_kv
+
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k_new = (x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v_new = (x @ p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.pos_embedding == "rope":
+        pos = _decode_positions(cache_len, B) + jnp.arange(S, dtype=jnp.int32)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k_new = apply_rope(k_new, pos, cfg.rope_theta)
+    ck = _scatter_tokens_paged(cache["k"], k_new, cache_len, block_table)
+    cv = _scatter_tokens_paged(cache["v"], v_new, cache_len, block_table)
+    new_cache = {"k": ck, "v": cv}
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.decode_attention_spec_paged(q, ck, cv, block_table,
+                                               cache_len)
+    else:
+        out = naive_attention(q, gather_paged_kv(ck, block_table),
+                              gather_paged_kv(cv, block_table),
+                              causal=True, q_offset=cache_len)
+    y = out.reshape(B, S, cfg.n_heads * hd) @ p["wo"]
     return y, new_cache
 
 

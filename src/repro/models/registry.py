@@ -30,6 +30,11 @@ class Model:
     # chunked paged prefill: ingest one block-sized prompt chunk straight
     # into the pools (write=False recomputes against prefix-hit blocks)
     paged_prefill_step: Optional[Callable] = None  # (params, pools, tokens, start, block_table, last_pos, write) -> (logits, pools)
+    # speculative verify (dense/moe GQA only): score a (B, S) draft window
+    # in one pass; returns (B, S, V) logits + the cache with the window's
+    # KV written (rollback is the caller's cache_len bookkeeping)
+    spec_decode_step: Optional[Callable] = None  # (params, cache, tokens, cache_len) -> (logits, cache)
+    paged_spec_decode_step: Optional[Callable] = None  # (params, pools, tokens, cache_len, block_table) -> (logits, pools)
     # the exact build_model kwargs this model was constructed with, so a
     # single-knob rebuild (e.g. serve.set_attn_impl) preserves the rest
     build_kwargs: dict = dataclasses.field(default_factory=dict)
@@ -113,5 +118,18 @@ def build_model(cfg: ModelConfig, *, impl: str = "chunked", chunk: int = 1024,
                  p, cfg, cache, tokens, start, block_table,
                  last_pos=last_pos, write=write, moe_cf=moe_cf))
             if cfg.family in ("dense", "moe") else None),
+        spec_decode_step=(
+            (lambda p, cache, tokens, cache_len:
+             transformer.spec_decode_step_decoder(p, cfg, cache, tokens,
+                                                  cache_len, impl=impl,
+                                                  moe_cf=moe_cf))
+            if cfg.family in ("dense", "moe") and not cfg.use_mla else None),
+        paged_spec_decode_step=(
+            (lambda p, cache, tokens, cache_len, block_table:
+             transformer.spec_decode_step_decoder(p, cfg, cache, tokens,
+                                                  cache_len, impl=impl,
+                                                  moe_cf=moe_cf,
+                                                  block_table=block_table))
+            if cfg.family in ("dense", "moe") and not cfg.use_mla else None),
         build_kwargs=kw,
     )

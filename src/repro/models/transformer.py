@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.models import ssm
 from repro.models.attention import (attn_params, gqa_decode, gqa_decode_paged,
+                                    gqa_decode_spec, gqa_decode_spec_paged,
                                     gqa_forward, gqa_params, gqa_prefill_paged,
                                     init_gqa_cache, init_gqa_pool,
                                     init_mla_cache, init_mla_pool, mla_decode,
@@ -685,6 +686,72 @@ def decode_step_decoder(params, cfg, cache, tokens, cache_len, *, impl="chunked"
         else:
             h, new_cache = jax.lax.scan(make_body(cfg.is_moe), h,
                                         (params["layers"], cache))
+
+    logits = _logits(params, cfg, h)
+    return logits, new_cache
+
+
+def spec_decode_step_decoder(params, cfg, cache, tokens, cache_len, *,
+                             impl="chunked", moe_cf=1.25, block_table=None):
+    """Speculative verify step for dense/moe stacks.
+
+    tokens: (B, S) int32 — the last accepted token followed by S-1 draft
+    tokens; window position qi occupies cache slot cache_len + qi. One pass
+    scores every draft: the returned logits are (B, S, V), where row qi is
+    the target model's next-token distribution *given* the window prefix
+    through position qi — row 0 scores the first draft token, row S-1 is
+    the bonus distribution past the last draft. The KV cache comes back
+    with all S positions written; the caller's accept/rollback is pure
+    cache_len bookkeeping (rejected tail KVs are masked dead by later
+    calls' lengths and overwritten in place by the next window).
+
+    Recurrent families (ssm/hybrid) fold positions into their state, so a
+    rejected draft cannot be rolled back by bookkeeping — refuse loudly.
+    VLM/MLA can grow spec windows later; dense/moe GQA is the serving path.
+    """
+    dimpl = "pallas" if impl == "pallas" else "naive"
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(f"speculative decode needs a slotted-KV family, "
+                         f"got {cfg.family!r}")
+    if cfg.use_mla:
+        raise ValueError("speculative decode is not implemented for MLA "
+                         "attention (absorbed-q verify window pending)")
+    h = embed_tokens(params["embed"], tokens)
+
+    def make_body(moe_layer):
+        def body(carry, xs):
+            hh = carry
+            lp, lcache = xs
+            x = apply_norm(lp["ln1"], hh, cfg.norm)
+            if block_table is not None:
+                a, lnew = gqa_decode_spec_paged(lp["attn"], x, lcache,
+                                                cache_len, block_table, cfg,
+                                                impl=dimpl)
+            else:
+                a, lnew = gqa_decode_spec(lp["attn"], x, lcache, cache_len,
+                                          cfg, impl=dimpl)
+            hh = hh + a
+            x = apply_norm(lp["ln2"], hh, cfg.norm)
+            if moe_layer:
+                m, _ = apply_moe(lp["moe"], x, cfg, capacity_factor=moe_cf)
+            else:
+                m = apply_mlp(lp["mlp"], x, cfg.activation)
+            return hh + m, lnew
+
+        return body
+
+    if cfg.is_moe and cfg.first_k_dense:
+        kd = cfg.first_k_dense
+        cache_dense = jax.tree_util.tree_map(lambda a: a[:kd], cache)
+        cache_moe = jax.tree_util.tree_map(lambda a: a[kd:], cache)
+        h, new_dense = jax.lax.scan(make_body(False), h,
+                                    (params["dense_layers"], cache_dense))
+        h, new_moe = jax.lax.scan(make_body(True), h, (params["layers"], cache_moe))
+        new_cache = jax.tree_util.tree_map(
+            lambda a, b: jnp.concatenate([a, b], 0), new_dense, new_moe)
+    else:
+        h, new_cache = jax.lax.scan(make_body(cfg.is_moe), h,
+                                    (params["layers"], cache))
 
     logits = _logits(params, cfg, h)
     return logits, new_cache

@@ -1,0 +1,19 @@
+"""Speculative decoding: draft sources + multi-token verification.
+
+A draft source proposes k cheap tokens per request; the target model scores
+the whole window in ONE multi-token decode pass (the flash-decode kernel
+grown to a q-block, ``kernels.flash_attention.flash_decode_spec{,_paged}``);
+the verifier accepts a prefix and emits one extra token — greedy mode is
+token-identical to non-speculative decoding, sampled mode is
+distribution-faithful rejection sampling against the engine's per-request
+PRNG streams. Draft depth k is a serving-rung axis
+(``engine.jobs.ServeRung.draft_depth``) so the SoC arbiter can walk
+speculation down under thermal or energy pressure.
+"""
+from repro.spec.draft import DraftSource, ModelDraft, NGramDraft, build_draft_source
+from repro.spec.verify import greedy_verify, rejection_verify
+
+__all__ = [
+    "DraftSource", "ModelDraft", "NGramDraft", "build_draft_source",
+    "greedy_verify", "rejection_verify",
+]

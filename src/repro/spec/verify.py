@@ -1,0 +1,105 @@
+"""Accept/rollback verdicts for speculative windows.
+
+Both verifiers consume the (B, S, V) logits of one multi-token verify pass
+over the window [last_emitted, d_1, .., d_{S-1}]: row qi is the target
+model's next-token distribution after window position qi, so row 0 scores
+draft d_1 and row S-1 is the bonus distribution past the last draft.
+
+They return ``(tokens, n_emit)`` where ``tokens[b, :n_emit[b]]`` are the
+tokens to emit for row b (1 <= n_emit <= S): the accepted draft prefix plus
+exactly one non-draft token (greedy argmax / residual resample / bonus).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sampling import sample_probs
+
+
+def greedy_verify(logits, drafts):
+    """Greedy acceptance: token-identical to non-speculative argmax decode.
+
+    logits: (B, S, V); drafts: (B, S-1) int32 draft tokens d_1..d_{S-1}.
+
+    Draft d_i is accepted iff it equals the argmax after window position
+    i-1; the emitted token at every position — accepted draft or first
+    mismatch — is that position's argmax, so the emitted stream is exactly
+    the chain a one-token-at-a-time greedy decode would produce.
+    """
+    best = jnp.argmax(logits, axis=-1).astype(jnp.int32)       # (B, S)
+    B, S = best.shape
+    if S > 1:
+        ok = (drafts.astype(jnp.int32) == best[:, :-1]).astype(jnp.int32)
+        n_acc = jnp.cumprod(ok, axis=1).sum(axis=1)            # (B,) 0..S-1
+    else:
+        n_acc = jnp.zeros((B,), jnp.int32)
+    return best, n_acc + 1
+
+
+def _split_keys(keys, tag: int):
+    return jax.vmap(jax.vmap(lambda k: jax.random.fold_in(k, tag)))(keys)
+
+
+def rejection_verify(logits, drafts, draft_probs: Optional[jax.Array], keys,
+                     *, temperature: float, top_k: int = 0):
+    """Distribution-faithful speculative sampling (accept/resample).
+
+    logits: (B, S, V) target logits; drafts: (B, S-1) proposed tokens;
+    draft_probs: (B, S-1, V) proposal distributions, or None for
+    deterministic proposals (one-hot — the n-gram head and greedy model
+    drafts); keys: (B, S, 2) uint32 — the engine's fold_in(seed, uid, index)
+    stream keys for the S candidate emission indices, so a request's
+    randomness stays batch-composition independent.
+
+    Draft d_i is accepted with probability min(1, q_i(d_i) / p_i(d_i))
+    where q is the target distribution under the SHARED temperature/top-k
+    masking (repro.launch.sampling — the same shaping the engine's fallback
+    sampler uses). On first rejection the token resamples from the residual
+    norm(max(q - p, 0)); if every draft survives, the bonus position samples
+    from q directly. Marginally, every emitted token ~ q exactly.
+    """
+    q = sample_probs(logits, temperature, top_k)               # (B, S, V)
+    B, S, V = q.shape
+    u_keys = _split_keys(keys, 0)
+    r_keys = _split_keys(keys, 1)
+    u = jax.vmap(jax.vmap(jax.random.uniform))(u_keys)         # (B, S)
+
+    if S > 1:
+        d = drafts.astype(jnp.int32)
+        qd = jnp.take_along_axis(q[:, :-1], d[..., None], -1)[..., 0]
+        if draft_probs is None:
+            # deterministic proposal: p(d) = 1, residual = q with d zeroed
+            pd = jnp.ones_like(qd)
+            onehot = jax.nn.one_hot(d, V, dtype=q.dtype)
+            resid = jnp.maximum(q[:, :-1] - onehot * qd[..., None], 0.0)
+        else:
+            p = draft_probs.astype(jnp.float32)
+            pd = jnp.take_along_axis(p, d[..., None], -1)[..., 0]
+            resid = jnp.maximum(q[:, :-1] - p, 0.0)
+        # u < min(1, qd/pd) without dividing: u*pd < qd (pd = 0 rejects
+        # unless qd > 0, which accepts — the proposal was impossible anyway)
+        ok = (u[:, :-1] * pd < qd).astype(jnp.int32)
+        n_acc = jnp.cumprod(ok, axis=1).sum(axis=1)            # (B,) 0..S-1
+        total = resid.sum(-1, keepdims=True)
+        resid = jnp.where(total > 0, resid / jnp.maximum(total, 1e-30),
+                          q[:, :-1])
+        fb_probs = jnp.concatenate([resid, q[:, -1:]], axis=1)  # (B, S, V)
+    else:
+        n_acc = jnp.zeros((B,), jnp.int32)
+        fb_probs = q
+
+    fb_logits = jnp.where(fb_probs > 0, jnp.log(fb_probs), -jnp.inf)
+    fallback = jax.vmap(jax.vmap(jax.random.categorical))(
+        r_keys, fb_logits).astype(jnp.int32)                   # (B, S)
+
+    pos = jnp.arange(S, dtype=jnp.int32)[None]
+    if S > 1:
+        dpad = jnp.concatenate(
+            [drafts.astype(jnp.int32), jnp.zeros((B, 1), jnp.int32)], axis=1)
+    else:
+        dpad = jnp.zeros((B, S), jnp.int32)
+    tokens = jnp.where(pos < n_acc[:, None], dpad, fallback)
+    return tokens, n_acc + 1

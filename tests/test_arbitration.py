@@ -279,6 +279,61 @@ def test_default_serve_ladder_dedupes_tiny_batches():
 
 
 # ---------------------------------------------------------------------------
+# speculative decoding rung: draft depth relinquishes before slot caps
+# ---------------------------------------------------------------------------
+
+
+def test_default_serve_ladder_puts_spec_rungs_above_slot_caps():
+    rungs = default_serve_ladder(8, draft_depth=4)
+    assert [r.name for r in rungs] == \
+        ["serve-full", "serve-spec-half", "serve-spec-off",
+         "serve-capped", "serve-lean"]
+    assert [r.draft_depth for r in rungs] == [None, 2, 0, 0, 0]
+    assert [r.slot_cap for r in rungs] == [None, None, None, 4, 2]
+    # depth 1: no half rung to insert, straight to spec-off
+    assert [r.name for r in default_serve_ladder(8, draft_depth=1)] == \
+        ["serve-full", "serve-spec-off", "serve-capped", "serve-lean"]
+    # non-speculating engines keep the original ladder shape
+    assert [r.draft_depth for r in default_serve_ladder(8)] == [None] * 3
+
+
+def test_thermal_walks_draft_depth_down_before_slot_cap():
+    """Under sustained thermal pressure a speculating ServeJob must give up
+    draft depth first — halve it, then switch speculation off — and only
+    then start capping slots: depth costs nothing but the speculative
+    speedup (streams are depth-invariant), a slot cap costs admissions."""
+    trace = _thermal()
+    model = build_model(TINY, impl="naive")
+    params = model.init(KEY)
+    engine = ContinuousBatchingEngine(model, params, max_batch=4, max_seq=48,
+                                      draft_depth=4)
+    rungs = default_serve_ladder(4, draft_depth=4)
+    for r in rungs:
+        r.latency_estimate_s = 0.1 * r.rel_latency
+    rng = np.random.default_rng(7)
+    reqs = [Request(uid=i, prompt=rng.integers(0, 64, 5).astype(np.int32),
+                    max_new_tokens=20) for i in range(16)]
+    serve = ServeJob(engine, reqs, rungs=rungs,
+                     latency_fn=trace_latency_fn(trace), adaptive=True,
+                     upgrade_patience=100, name="serve")
+    res = SwanRuntime([serve], trace=trace).run(14)
+    assert engine.spec_rounds > 0, "speculation must run at the full rung"
+    downs = [m for m in res.timeline.migrations if m.reason != "clear"]
+    assert downs, "the thermal trace must force serve downgrades"
+    names = [m.to_rung for m in downs]
+    assert names[0] == "serve-spec-half"
+    if len(names) > 1:
+        assert names[1] == "serve-spec-off"
+    first_cap = next((i for i, n in enumerate(names)
+                      if n in ("serve-capped", "serve-lean")), None)
+    if first_cap is not None:
+        assert {"serve-spec-half", "serve-spec-off"} <= set(names[:first_cap])
+    # the walk actually reached the engine knob
+    assert engine.draft_depth in (0, 2, 4)
+    assert engine.draft_depth < 4 or not downs
+
+
+# ---------------------------------------------------------------------------
 # energy budget: low battery forces low-power rungs
 # ---------------------------------------------------------------------------
 

@@ -190,3 +190,85 @@ def test_timezone_augmentation_multiplies_exactly(n_base, tz_shifts, seed):
     traces = make_client_traces(n_base, seed=seed, tz_shifts=tz_shifts)
     assert len(traces) == n_base * tz_shifts
     assert len({t.start_offset_min for t in traces}) == tz_shifts
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding: the rejection verifier is distribution-faithful
+# ---------------------------------------------------------------------------
+
+from repro.launch.sampling import sample_probs  # noqa: E402
+from repro.spec.verify import greedy_verify, rejection_verify  # noqa: E402
+
+
+def _spec_keys(seed, n, s):
+    """(n, s) grid of fold_in(fold_in(base, row), index) keys — the same
+    per-(request, emission-index) stream shape the engine uses."""
+    base = jax.random.PRNGKey(seed)
+    return jax.vmap(lambda i: jax.vmap(
+        lambda j: jax.random.fold_in(jax.random.fold_in(base, i), j))(
+            jnp.arange(s)))(jnp.arange(n))
+
+
+@given(st.integers(0, 2 ** 16), st.integers(2, 3),
+       st.sampled_from([0.7, 1.0, 1.4]))
+@settings(max_examples=8, deadline=None)
+def test_speculative_sampling_matches_target_distribution(seed, S, temp):
+    """When drafts are sampled from the proposal p, the emitted token's
+    marginal equals the target sampling distribution q exactly (the
+    accept-w.p.-min(1, q/p) + residual-resample identity). Checked as a
+    total-variation bound over many iid verify rows."""
+    V, N = 12, 4000
+    rng = np.random.default_rng(seed)
+    logits = (rng.standard_normal((S, V)) * 1.5).astype(np.float32)
+    p = rng.dirichlet(np.full(V, 0.6), size=S - 1).astype(np.float32)
+    p /= p.sum(-1, keepdims=True)
+    q0 = np.asarray(sample_probs(jnp.asarray(logits)[None], temp, 0))[0, 0]
+    drafts = np.stack([rng.choice(V, size=N, p=p[i].astype(np.float64)
+                                  / p[i].sum(dtype=np.float64))
+                       for i in range(S - 1)], axis=1).astype(np.int32)
+    toks, _ = rejection_verify(
+        jnp.broadcast_to(jnp.asarray(logits), (N, S, V)),
+        jnp.asarray(drafts),
+        jnp.broadcast_to(jnp.asarray(p), (N, S - 1, V)),
+        _spec_keys(seed, N, S), temperature=temp)
+    emp = np.bincount(np.asarray(toks[:, 0]), minlength=V) / N
+    assert 0.5 * np.abs(emp - q0).sum() < 0.07
+
+
+@given(st.integers(0, 2 ** 16))
+@settings(max_examples=6, deadline=None)
+def test_speculative_sampling_one_hot_proposals_faithful(seed):
+    """Deterministic proposals (the n-gram head, draft_probs=None): accept
+    w.p. q(d), residual = q with d zeroed out — the emitted marginal must
+    still be exactly q."""
+    V, N, S = 10, 4000, 2
+    rng = np.random.default_rng(seed)
+    logits = rng.standard_normal((S, V)).astype(np.float32)
+    d = int(rng.integers(V))
+    q0 = np.asarray(sample_probs(jnp.asarray(logits)[None], 1.0, 0))[0, 0]
+    toks, _ = rejection_verify(
+        jnp.broadcast_to(jnp.asarray(logits), (N, S, V)),
+        jnp.full((N, S - 1), d, jnp.int32), None,
+        _spec_keys(seed + 1, N, S), temperature=1.0)
+    emp = np.bincount(np.asarray(toks[:, 0]), minlength=V) / N
+    assert 0.5 * np.abs(emp - q0).sum() < 0.07
+
+
+@given(st.integers(0, 2 ** 16), st.integers(1, 5))
+@settings(max_examples=25, deadline=None)
+def test_greedy_verify_is_sequential_argmax_chain(seed, S):
+    """greedy_verify emits exactly the prefix a one-token-at-a-time argmax
+    decode would produce: accepted drafts match the chain, the first
+    mismatch (or bonus) is that position's argmax."""
+    rng = np.random.default_rng(seed)
+    logits = rng.standard_normal((3, S, 16)).astype(np.float32)
+    drafts = rng.integers(0, 16, (3, S - 1)).astype(np.int32)
+    toks, n = jax.device_get(
+        greedy_verify(jnp.asarray(logits), jnp.asarray(drafts)))
+    for b in range(3):
+        best = logits[b].argmax(-1)
+        m = 1
+        while m < S and drafts[b, m - 1] == best[m - 1]:
+            m += 1
+        assert int(n[b]) == m
+        assert list(toks[b, :m]) == [int(t) for t in best[:m]]
